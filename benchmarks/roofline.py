@@ -1,0 +1,72 @@
+"""Roofline table from the dry-run results (experiments/dryrun.json).
+
+Prints per (arch x shape x mesh): the three terms, the bottleneck, and the
+MODEL_FLOPS / HLO_FLOPs usefulness ratio.  Used by benchmarks.run and to
+generate EXPERIMENTS.md section Roofline.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Dict, List, Optional
+
+RESULTS = "experiments/dryrun.json"
+
+
+def load(path: str = RESULTS) -> Dict:
+    if not os.path.exists(path):
+        return {}
+    with open(path) as f:
+        return json.load(f)
+
+
+def fmt_s(x: float) -> str:
+    if x >= 1:
+        return f"{x:7.2f}s "
+    return f"{x*1e3:7.2f}ms"
+
+
+def rows(results: Dict, mesh: Optional[str] = "single") -> List[Dict]:
+    out = []
+    for key, rec in sorted(results.items()):
+        arch, shape, m = key.split("|")
+        if mesh and m != mesh:
+            continue
+        if rec.get("status") != "ok":
+            out.append(dict(arch=arch, shape=shape, mesh=m,
+                            status=rec.get("status"),
+                            reason=rec.get("reason", "")[:60]))
+            continue
+        r = rec["roofline"]
+        out.append(dict(
+            arch=arch, shape=shape, mesh=m, status="ok",
+            compute_s=r["compute_s"], memory_s=r["memory_s"],
+            collective_s=r["collective_s"], bottleneck=r["bottleneck"],
+            flops=r["flops"], coll_bytes=r["coll_bytes"],
+            useful=r["useful_frac"], model_flops=r["model_flops"],
+            tokens=rec.get("tokens_per_step"),
+        ))
+    return out
+
+
+def print_table(results: Dict, mesh: str = "single",
+                csv_rows: Optional[List[str]] = None) -> None:
+    print(f"# Roofline ({mesh}-pod): compute/memory/collective terms per step")
+    hdr = (f"{'arch':15s} {'shape':12s} {'compute':9s} {'memory':9s} "
+           f"{'collect.':9s} {'bound':10s} {'useful':7s}")
+    print(hdr)
+    for r in rows(results, mesh):
+        if r["status"] != "ok":
+            print(f"{r['arch']:15s} {r['shape']:12s} -- {r['status']}: "
+                  f"{r.get('reason','')}")
+            continue
+        useful = f"{r['useful']:.2f}" if r["useful"] else "-"
+        print(f"{r['arch']:15s} {r['shape']:12s} {fmt_s(r['compute_s'])} "
+              f"{fmt_s(r['memory_s'])} {fmt_s(r['collective_s'])} "
+              f"{r['bottleneck']:10s} {useful:7s}")
+        if csv_rows is not None:
+            dom = max(r["compute_s"], r["memory_s"], r["collective_s"])
+            csv_rows.append(
+                f"roofline/{r['arch']}/{r['shape']}/{mesh},"
+                f"{dom*1e6:.1f},bottleneck={r['bottleneck']}"
+                f";useful={useful}")

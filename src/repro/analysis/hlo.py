@@ -1,0 +1,167 @@
+"""HLO analysis: collective-byte accounting + roofline terms.
+
+``collective_bytes`` parses HLO text and sums the result-shape bytes of every
+collective op (all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute), which cost_analysis() does not report.  ``roofline``
+combines cost_analysis with the collective bytes into the three-term model
+(EXPERIMENTS.md section Roofline):
+
+    compute    = FLOPs / (chips * peak_flops)
+    memory     = bytes / (chips * hbm_bw)
+    collective = coll_bytes / (chips * ici_bw)
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, Optional
+
+# TPU v5e-like hardware constants (per chip)
+PEAK_FLOPS = 197e12        # bf16
+HBM_BW = 819e9             # bytes/s
+ICI_BW = 50e9              # bytes/s per link
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+# matches:  %x = f32[8,16]{1,0} all-reduce(...)   or tuple results
+_OP_RE = re.compile(
+    r"=\s*(\([^)]*\)|[\w]+\[[^\]]*\](?:\{[^}]*\})?)\s+"
+    r"(all-reduce-start|all-reduce|all-gather-start|all-gather|"
+    r"reduce-scatter|all-to-all|collective-permute-start|collective-permute)"
+    r"\(")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclass
+class CollectiveStats:
+    bytes_by_kind: Dict[str, int] = field(default_factory=dict)
+    count_by_kind: Dict[str, int] = field(default_factory=dict)
+
+    @property
+    def total_bytes(self) -> int:
+        return sum(self.bytes_by_kind.values())
+
+    @property
+    def total_count(self) -> int:
+        return sum(self.count_by_kind.values())
+
+
+def collective_bytes(hlo_text: str) -> CollectiveStats:
+    stats = CollectiveStats()
+    for m in _OP_RE.finditer(hlo_text):
+        shape_str, kind = m.group(1), m.group(2)
+        kind = kind.replace("-start", "")
+        b = _shape_bytes(shape_str)
+        stats.bytes_by_kind[kind] = stats.bytes_by_kind.get(kind, 0) + b
+        stats.count_by_kind[kind] = stats.count_by_kind.get(kind, 0) + 1
+    return stats
+
+
+@dataclass
+class Roofline:
+    flops: float
+    bytes_accessed: float
+    coll: CollectiveStats
+    chips: int
+    bytes_min: float = 0.0
+    compute_s: float = 0.0
+    memory_s: float = 0.0           # write-once ceiling
+    memory_floor_s: float = 0.0     # perfectly-fused floor
+    collective_s: float = 0.0
+    bottleneck: str = ""
+    model_flops: Optional[float] = None
+    xla_flops_raw: Optional[float] = None
+
+    def finalize(self) -> "Roofline":
+        self.compute_s = self.flops / (self.chips * PEAK_FLOPS)
+        self.memory_s = self.bytes_accessed / (self.chips * HBM_BW)
+        self.memory_floor_s = self.bytes_min / (self.chips * HBM_BW)
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        self.collective_s = self.coll.total_bytes / (self.chips * ICI_BW)
+        terms["collective"] = self.collective_s
+        self.bottleneck = max(terms, key=terms.get)
+        return self
+
+    @property
+    def useful_flops_frac(self) -> Optional[float]:
+        if self.model_flops and self.flops:
+            return self.model_flops / self.flops
+        return None
+
+    @property
+    def step_time_s(self) -> float:
+        """Optimistic (max of terms) step-time estimate."""
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    def row(self) -> Dict:
+        return {
+            "flops": self.flops,
+            "bytes": self.bytes_accessed,
+            "bytes_min": self.bytes_min,
+            "coll_bytes": self.coll.total_bytes,
+            "coll_count": self.coll.total_count,
+            "compute_s": self.compute_s,
+            "memory_s": self.memory_s,
+            "memory_floor_s": self.memory_floor_s,
+            "collective_s": self.collective_s,
+            "bottleneck": self.bottleneck,
+            "model_flops": self.model_flops,
+            "useful_frac": self.useful_flops_frac,
+            "xla_flops_raw": self.xla_flops_raw,
+        }
+
+
+def analyze(compiled, *, chips: int, model_flops: Optional[float] = None,
+            hlo_text: Optional[str] = None) -> Roofline:
+    """Roofline terms from a compiled jax executable.
+
+    Uses the scan-aware HLO counter (hlo_counter.py): XLA's cost_analysis
+    counts while/scan bodies once, which undercounts layer-scanned models by
+    the layer count.  All quantities are per-partition (the SPMD module), so
+    the time terms divide by per-chip peak rates with chips=1 scaling — we
+    keep the global convention by multiplying back by ``chips``.
+    """
+    from . import hlo_counter
+
+    text = hlo_text if hlo_text is not None else compiled.as_text()
+    tot = hlo_counter.analyze_text(text)
+    # per-partition counts x chips = global work
+    flops = tot.flops * chips
+    byts = tot.bytes * chips
+    coll = CollectiveStats(
+        bytes_by_kind={k: v * chips for k, v in tot.coll_by_kind.items()},
+        count_by_kind={k: 1 for k in tot.coll_by_kind},
+    )
+    r = Roofline(flops=flops, bytes_accessed=byts, coll=coll,
+                 chips=chips, bytes_min=tot.bytes_min * chips,
+                 model_flops=model_flops).finalize()
+    # raw (scan-unaware) XLA numbers kept for reference
+    try:
+        c = compiled.cost_analysis()
+        ca = c[0] if isinstance(c, (list, tuple)) else (c or {})
+        r.xla_flops_raw = float(ca.get("flops", 0.0))
+    except Exception:
+        pass
+    return r

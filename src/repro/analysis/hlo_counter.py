@@ -1,0 +1,377 @@
+"""Scan-aware HLO module analyzer.
+
+XLA's ``compiled.cost_analysis()`` counts a ``while`` (lax.scan) body ONCE,
+which silently undercounts FLOPs/bytes/collectives by the trip count — fatal
+for scanned-layer transformers (24-64x) and scanned-time SSMs (4k-500k x).
+This module parses the compiled HLO text into its computation graph and
+computes, with while-trip multiplication:
+
+  * dot FLOPs            2 * prod(result dims) * prod(lhs contracting dims)
+  * HBM traffic model    sum over scheduled ops of operand+result bytes
+                         (tuple-plumbing ops excluded; fusions counted at
+                         their boundary — internals are free)
+  * collective bytes     result-shape bytes of each collective op
+
+Trip counts come from the integer constants in the paired while-condition
+computation (scan lowers to  iter < L ).  Verified against analytic op counts
+in tests/test_hlo_counter.py.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16, "s4": 1, "u4": 1,
+}
+
+_COLLECTIVES = {"all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute", "all-reduce-start", "all-gather-start",
+                "collective-permute-start"}
+
+# ops that are pure tuple/layout plumbing: no HBM traffic of their own.
+# 'copy' is included: CPU HLO inserts whole-carry copies around while loops
+# that TPU buffer assignment aliases away.
+_FREE_OPS = {"tuple", "get-tuple-element", "parameter", "bitcast", "constant",
+             "after-all", "partition-id", "replica-id", "iota", "tuple-select",
+             "opt-barrier", "all-reduce-done", "all-gather-done",
+             "collective-permute-done", "copy-done", "copy-start", "copy"}
+
+# elementwise-ish ops: charged at RESULT bytes only ("write-once" model: on
+# TPU these fuse into producers/consumers; each materialised tensor is
+# written once, and reads are charged at the dot/reduce/fusion that consumes
+# them).  Also counted as 1 FLOP per output element.
+_ELEMENTWISE = {"add", "subtract", "multiply", "divide", "maximum", "minimum",
+                "negate", "abs", "exponential", "log", "rsqrt", "sqrt",
+                "tanh", "logistic", "power", "and", "or", "not", "xor",
+                "compare", "select", "clamp", "floor", "ceil",
+                "round-nearest-afz", "sign", "convert", "broadcast",
+                "reshape", "transpose", "slice", "concatenate", "pad",
+                "reverse", "rem", "shift-right-logical", "shift-left",
+                "shift-right-arithmetic", "exponential-minus-one", "cosine",
+                "sine", "is-finite", "stochastic-convert"}
+
+_FLOP_ELEMWISE = {"add", "subtract", "multiply", "divide", "maximum",
+                  "minimum", "negate", "abs", "exponential", "log", "rsqrt",
+                  "sqrt", "tanh", "logistic", "power", "compare", "select",
+                  "clamp", "rem", "exponential-minus-one", "cosine", "sine"}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+_INSTR_RE = re.compile(
+    r"^\s+(?:ROOT\s+)?%([\w\.\-]+)\s*=\s*"
+    r"(\(.*?\)|[\w]+\[[^\]]*\](?:\{[^}]*\})?|[\w]+\[\])\s+"
+    r"([\w\-]+)\((.*)$")
+
+_COMP_RE = re.compile(r"^(ENTRY\s+)?%?([\w\.\-]+)\s*\(.*\)\s*->\s*.*\{")
+
+
+def _shape_list(type_str: str) -> List[Tuple[str, List[int]]]:
+    out = []
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        out.append((dt, [int(d) for d in dims.split(",")] if dims else []))
+    return out
+
+
+def _bytes_of(type_str: str) -> int:
+    total = 0
+    for dt, dims in _shape_list(type_str):
+        n = 1
+        for d in dims:
+            n *= d
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _elems_of(type_str: str) -> int:
+    total = 0
+    for _, dims in _shape_list(type_str):
+        n = 1
+        for d in dims:
+            n *= d
+        total += n
+    return total
+
+
+@dataclass
+class Instr:
+    name: str
+    type_str: str
+    op: str
+    rest: str          # operand list + attributes (raw)
+
+    def operands(self) -> List[str]:
+        # names like %foo up to the closing paren of the op
+        depth = 1
+        end = 0
+        for i, ch in enumerate(self.rest):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    end = i
+                    break
+        inner = self.rest[:end]
+        return re.findall(r"%([\w\.\-]+)", inner)
+
+    def attr(self, name: str) -> Optional[str]:
+        m = re.search(rf"{name}=%?([\w\.\-]+)", self.rest)
+        return m.group(1) if m else None
+
+    def attr_list(self, name: str) -> List[int]:
+        m = re.search(rf"{name}=\{{([\d,]*)\}}", self.rest)
+        if not m or not m.group(1):
+            return []
+        return [int(x) for x in m.group(1).split(",")]
+
+
+@dataclass
+class Computation:
+    name: str
+    instrs: List[Instr] = field(default_factory=list)
+    symbols: Dict[str, str] = field(default_factory=dict)  # name -> type str
+
+
+@dataclass
+class Totals:
+    flops: float = 0.0
+    bytes: float = 0.0       # write-once ceiling (every tensor materialised)
+    bytes_min: float = 0.0   # perfectly-fused floor (dot/slice/param traffic)
+    coll_bytes: float = 0.0
+    coll_count: float = 0.0
+    coll_by_kind: Dict[str, float] = field(default_factory=dict)
+
+    def __iadd__(self, o: "Totals"):
+        self.flops += o.flops
+        self.bytes += o.bytes
+        self.bytes_min += o.bytes_min
+        self.coll_bytes += o.coll_bytes
+        self.coll_count += o.coll_count
+        for k, v in o.coll_by_kind.items():
+            self.coll_by_kind[k] = self.coll_by_kind.get(k, 0.0) + v
+        return self
+
+    def scaled(self, s: float) -> "Totals":
+        return Totals(self.flops * s, self.bytes * s, self.bytes_min * s,
+                      self.coll_bytes * s, self.coll_count * s,
+                      {k: v * s for k, v in self.coll_by_kind.items()})
+
+
+class HloModule:
+    def __init__(self, text: str):
+        self.computations: Dict[str, Computation] = {}
+        self.entry: Optional[str] = None
+        self._parse(text)
+        self._memo: Dict[str, Totals] = {}
+
+    def _parse(self, text: str) -> None:
+        cur: Optional[Computation] = None
+        for line in text.splitlines():
+            mc = _COMP_RE.match(line)
+            if mc:
+                cur = Computation(mc.group(2))
+                self.computations[cur.name] = cur
+                if mc.group(1):
+                    self.entry = cur.name
+                continue
+            if line.startswith("}"):
+                cur = None
+                continue
+            if cur is None:
+                continue
+            mi = _INSTR_RE.match(line)
+            if mi:
+                ins = Instr(mi.group(1), mi.group(2), mi.group(3),
+                            mi.group(4))
+                cur.instrs.append(ins)
+                cur.symbols[ins.name] = ins.type_str
+
+    # -- trip counts ---------------------------------------------------------
+    def _trip_count(self, cond_name: str) -> int:
+        comp = self.computations.get(cond_name)
+        if comp is None:
+            return 1
+        best = 1
+        for ins in comp.instrs:
+            if ins.op == "constant":
+                m = re.match(r"\s*(\d+)\s*\)", ins.rest)
+                if m:
+                    best = max(best, int(m.group(1)))
+        return best
+
+    def _fusion_bytes(self, comp: Computation, ins: Instr):
+        """Write-once fusion traffic -> (ceiling, floor).
+
+        Ceiling: the fusion's RESULT bytes + slice-refined param reads +
+        in-fusion dot operand reads (whole-tensor param reads are not
+        re-charged: charged when written, contraction reads at dots).
+        Floor ("perfectly fused"): only slice-refined reads, dot reads and
+        DUS-root update writes — what a fully fused kernel stack (flash
+        attention and friends) actually moves through HBM."""
+        b = float(_bytes_of(ins.type_str))
+        b_min = 0.0
+        callee = self.computations.get(ins.attr("calls") or "")
+        ops = ins.operands()
+        if callee is None:
+            return b, b_min
+        # a fusion rooted at dynamic-update-slice (scan writing its per-step
+        # output into the stacked buffer) writes only the update region
+        root = callee.instrs[-1] if callee.instrs else None
+        if root is not None and root.op == "bitcast" and callee.instrs:
+            tgt = root.operands()
+            if tgt:
+                src = next((ci for ci in callee.instrs
+                            if ci.name == tgt[0]), None)
+                if src is not None:
+                    root = src
+        if root is not None and root.op == "dynamic-update-slice":
+            u_ops = root.operands()
+            if len(u_ops) > 1:
+                b = 2.0 * _bytes_of(callee.symbols.get(u_ops[1], ""))
+        b_min += 0.0 if root is None or root.op != "dynamic-update-slice" \
+            else b
+        # map parameter index -> name
+        param_names = {}
+        for ci in callee.instrs:
+            if ci.op == "parameter":
+                m = re.match(r"\s*(\d+)\s*\)", ci.rest)
+                if m:
+                    param_names[int(m.group(1))] = ci.name
+        for idx, o in enumerate(ops):
+            full = _bytes_of(comp.symbols.get(o, ""))
+            pname = param_names.get(idx)
+            if pname is None:
+                continue
+            uses = [ci for ci in callee.instrs if pname in ci.operands()]
+            if uses and all(ci.op in ("dynamic-slice", "dynamic-update-slice")
+                            for ci in uses):
+                sliced = 0
+                for ci in uses:
+                    if ci.op == "dynamic-slice":
+                        sliced += _bytes_of(ci.type_str)
+                    else:
+                        u_ops = ci.operands()
+                        if len(u_ops) > 1:
+                            sliced += _bytes_of(
+                                callee.symbols.get(u_ops[1], ""))
+                b += min(full, sliced)
+                b_min += min(full, sliced)
+            # in-fusion dots read their operands: charge those reads
+            for ci in callee.instrs:
+                if ci.op == "dot" and pname in ci.operands():
+                    b += full
+                    b_min += full
+                    break
+        return b, b_min
+
+    # -- per-computation totals (with callee multiplication) -----------------
+    def totals(self, comp_name: Optional[str] = None) -> Totals:
+        name = comp_name or self.entry
+        if name in self._memo:
+            return self._memo[name]
+        comp = self.computations.get(name)
+        t = Totals()
+        if comp is None:
+            return t
+        self._memo[name] = t  # break cycles defensively
+        for ins in comp.instrs:
+            if ins.op == "dot":
+                ops = ins.operands()
+                lhs_t = comp.symbols.get(ops[0], "") if ops else ""
+                out_elems = 1
+                for _, dims in _shape_list(ins.type_str):
+                    for d in dims:
+                        out_elems *= d
+                contract = 1
+                lhs_shapes = _shape_list(lhs_t)
+                if lhs_shapes:
+                    _, lhs_dims = lhs_shapes[0]
+                    for ci in ins.attr_list("lhs_contracting_dims"):
+                        if ci < len(lhs_dims):
+                            contract *= lhs_dims[ci]
+                t.flops += 2.0 * out_elems * contract
+            if ins.op in _COLLECTIVES:
+                kind = ins.op.replace("-start", "")
+                b = _bytes_of(ins.type_str)
+                t.coll_bytes += b
+                t.coll_count += 1
+                t.coll_by_kind[kind] = t.coll_by_kind.get(kind, 0.0) + b
+            # elementwise FLOPs (1 per output element; reduces: per input elem)
+            if ins.op in _FLOP_ELEMWISE:
+                t.flops += _elems_of(ins.type_str)
+            elif ins.op in ("reduce", "reduce-window"):
+                ops = ins.operands()
+                if ops:
+                    t.flops += _elems_of(comp.symbols.get(ops[0], ""))
+            # HBM traffic model
+            if ins.op not in _FREE_OPS:
+                if ins.op == "dot":
+                    b = _bytes_of(ins.type_str)
+                    for o in ins.operands():
+                        b += _bytes_of(comp.symbols.get(o, ""))
+                    t.bytes_min += b
+                if ins.op == "dynamic-slice":
+                    # reads + writes only the slice
+                    t.bytes += 2 * _bytes_of(ins.type_str)
+                    t.bytes_min += 2 * _bytes_of(ins.type_str)
+                elif ins.op == "dynamic-update-slice":
+                    # touches only the update region (read-modify-write)
+                    ops = ins.operands()
+                    upd = _bytes_of(comp.symbols.get(ops[1], "")) \
+                        if len(ops) > 1 else 0
+                    t.bytes += 2 * upd
+                    t.bytes_min += 2 * upd
+                elif ins.op == "fusion":
+                    fb, fb_min = self._fusion_bytes(comp, ins)
+                    t.bytes += fb
+                    t.bytes_min += fb_min
+                elif ins.op in _ELEMENTWISE:
+                    t.bytes += _bytes_of(ins.type_str)   # write-once model
+                else:
+                    b = _bytes_of(ins.type_str)
+                    for o in ins.operands():
+                        b += _bytes_of(comp.symbols.get(o, ""))
+                    t.bytes += b
+                    if ins.op not in ("dot",):  # dot already in bytes_min
+                        t.bytes_min += b
+            # recursion into callees
+            if ins.op == "while":
+                body = ins.attr("body")
+                cond = ins.attr("condition")
+                trip = self._trip_count(cond) if cond else 1
+                t += self.totals(body).scaled(trip)
+            elif ins.op == "fusion":
+                callee = ins.attr("calls")
+                if callee:
+                    sub = self.totals(callee)
+                    t.flops += sub.flops
+                    t.coll_bytes += sub.coll_bytes
+                    t.coll_count += sub.coll_count
+                    for k, v in sub.coll_by_kind.items():
+                        t.coll_by_kind[k] = t.coll_by_kind.get(k, 0) + v
+                    # fusion internals contribute no extra HBM bytes
+            elif ins.op == "call":
+                callee = ins.attr("to_apply")
+                if callee:
+                    t += self.totals(callee)
+            elif ins.op == "conditional":
+                m = re.search(r"branch_computations=\{([^}]*)\}", ins.rest)
+                if m:
+                    branches = re.findall(r"%([\w\.\-]+)", m.group(1))
+                    subs = [self.totals(b) for b in branches]
+                    if subs:
+                        best = max(subs, key=lambda s: s.flops)
+                        t += best
+        self._memo[name] = t
+        return t
+
+
+def analyze_text(text: str) -> Totals:
+    return HloModule(text).totals()

@@ -1,0 +1,131 @@
+"""Sharded checkpointing: atomic, async, mesh-agnostic, with retention.
+
+Format: one .npz per checkpoint step (flattened path->array) + manifest.json
+(step, data state, config fingerprint).  Writes go to a temp dir + atomic
+rename; an async mode runs the serialisation on a worker thread so the train
+loop overlaps I/O with compute.  Arrays are stored as host (fully replicated)
+values with their *logical* pytree paths — restore re-places them under any
+mesh (elastic re-mesh: restore onto a different topology than the save).
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import tempfile
+import threading
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+
+def _flatten(tree) -> Dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(_k(k) for k in path)
+        flat[key] = np.asarray(jax.device_get(leaf))
+    return flat
+
+
+def _k(k) -> str:
+    if hasattr(k, "key"):
+        return str(k.key)
+    if hasattr(k, "name"):
+        return str(k.name)
+    if hasattr(k, "idx"):
+        return str(k.idx)
+    return str(k)
+
+
+def _unflatten_into(template, flat: Dict[str, np.ndarray]):
+    paths_leaves = jax.tree_util.tree_flatten_with_path(template)
+    leaves = []
+    for path, leaf in paths_leaves[0]:
+        key = "/".join(_k(k) for k in path)
+        if key not in flat:
+            raise KeyError(f"checkpoint missing leaf {key!r}")
+        arr = flat[key]
+        if tuple(arr.shape) != tuple(leaf.shape):
+            raise ValueError(f"shape mismatch for {key}: ckpt {arr.shape} "
+                             f"vs template {leaf.shape}")
+        leaves.append(arr.astype(leaf.dtype))
+    return jax.tree_util.tree_unflatten(paths_leaves[1], leaves)
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, *, keep: int = 3,
+                 async_save: bool = True):
+        self.dir = directory
+        self.keep = keep
+        self.async_save = async_save
+        self._thread: Optional[threading.Thread] = None
+        os.makedirs(directory, exist_ok=True)
+
+    # -- save ---------------------------------------------------------------
+    def save(self, step: int, state, *, extra: Optional[Dict] = None) -> None:
+        flat = _flatten(state)   # device_get on the train thread (cheap copy)
+        if self.async_save:
+            self.wait()
+            self._thread = threading.Thread(
+                target=self._write, args=(step, flat, extra or {}))
+            self._thread.start()
+        else:
+            self._write(step, flat, extra or {})
+
+    def _write(self, step: int, flat: Dict[str, np.ndarray],
+               extra: Dict) -> None:
+        tmp = tempfile.mkdtemp(dir=self.dir, prefix=".tmp_")
+        try:
+            np.savez(os.path.join(tmp, "arrays.npz"), **flat)
+            with open(os.path.join(tmp, "manifest.json"), "w") as f:
+                json.dump({"step": step, "extra": extra}, f)
+            final = os.path.join(self.dir, f"step_{step:010d}")
+            if os.path.exists(final):
+                shutil.rmtree(final)
+            os.rename(tmp, final)       # atomic publish
+        except BaseException:
+            shutil.rmtree(tmp, ignore_errors=True)
+            raise
+        self._gc()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def _gc(self) -> None:
+        steps = self.all_steps()
+        for s in steps[:-self.keep]:
+            shutil.rmtree(os.path.join(self.dir, f"step_{s:010d}"),
+                          ignore_errors=True)
+
+    # -- restore ------------------------------------------------------------
+    def all_steps(self) -> List[int]:
+        out = []
+        for name in os.listdir(self.dir):
+            if name.startswith("step_") and not name.startswith(".tmp"):
+                manifest = os.path.join(self.dir, name, "manifest.json")
+                if os.path.exists(manifest):
+                    out.append(int(name.split("_")[1]))
+        return sorted(out)
+
+    def latest_step(self) -> Optional[int]:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def restore(self, step: int, template) -> Tuple[Any, Dict]:
+        path = os.path.join(self.dir, f"step_{step:010d}")
+        with open(os.path.join(path, "manifest.json")) as f:
+            manifest = json.load(f)
+        with np.load(os.path.join(path, "arrays.npz")) as z:
+            flat = {k: z[k] for k in z.files}
+        state = _unflatten_into(template, flat)
+        return state, manifest.get("extra", {})
+
+    def restore_latest(self, template) -> Optional[Tuple[int, Any, Dict]]:
+        step = self.latest_step()
+        if step is None:
+            return None
+        state, extra = self.restore(step, template)
+        return step, state, extra

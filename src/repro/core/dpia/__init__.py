@@ -1,0 +1,23 @@
+"""Data Parallel Idealised Algol (DPIA) — the paper's contribution in JAX.
+
+Public surface:
+  types    — data & phrase types (Fig. 1)
+  phrases  — AST + smart constructors (Fig. 4)
+  check    — SCIR interference/race-freedom checking (Fig. 3)
+  interp   — functional reference semantics (the oracle, section 5.2)
+  stage1   — acceptor/continuation-passing translation (Fig. 5)
+  stage2   — intermediate combinators -> loops (section 4.2)
+  hoist    — allocation hoisting out of parallel loops (section 6.4)
+  stage3_jnp      — imperative DPIA -> executable JAX (Fig. 6 analogue)
+  stage3_pallas   — imperative DPIA -> pl.pallas_call (TPU kernels)
+  stage3_shardmap — mesh-level strategies -> shard_map + collectives
+  strategies      — semantics-preserving rewrites (Steuwer et al. 2015 style)
+"""
+from . import (check, hoist, interp, phrases, pretty, stage1, stage2,
+               stage3_jnp, stage3_pallas, stage3_shardmap, strategies, types)  # noqa: F401
+from .phrases import (  # noqa: F401
+    GRID, HBM, LANES, MESH, PAR, REG, SEQ, VMEM, Par,
+    add, div, fmax, lit, map_grid, map_lanes, map_mesh, map_par, map_seq, mul,
+    reduce_seq, sub, to_hbm, to_reg, to_vmem, var_acc, var_exp,
+)
+from .types import Arr, Idx, Num, Pair, Vec, arr  # noqa: F401

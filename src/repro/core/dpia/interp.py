@@ -1,0 +1,149 @@
+"""Functional reference semantics of DPIA expressions (paper section 5.2).
+
+``interp(E, env)`` is the denotation [[E]] used as the oracle for translation
+correctness (Theorem 5.1 as an executable property).  Values are pytrees:
+
+  * ``Arr(n, d)``   -> leading axis of size n on every leaf
+  * ``Pair(a, b)``  -> python 2-tuple (struct-of-arrays)
+  * ``Vec(w, dt)``  -> trailing lane axis of size w
+  * ``Num/Idx``     -> scalar jnp arrays
+
+The interpreter is trace-compatible: it can run under jit/vmap, which is how
+``map`` is given its parallel semantics here (vmap = the mathematical reading).
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import phrases as P
+from .types import Arr, ExpT, Num, Pair, dtype_of, shape_of
+
+Env = Dict[str, object]
+
+_UNOPS: Dict[str, Callable] = {
+    "neg": lambda x: -x,
+    "exp": jnp.exp,
+    "log": jnp.log,
+    "abs": jnp.abs,
+    "rsqrt": jax.lax.rsqrt,
+    "tanh": jnp.tanh,
+    "sigmoid": jax.nn.sigmoid,
+}
+
+_BINOPS: Dict[str, Callable] = {
+    "add": jnp.add,
+    "sub": jnp.subtract,
+    "mul": jnp.multiply,
+    "div": jnp.divide,
+    "max": jnp.maximum,
+    "min": jnp.minimum,
+}
+
+
+def interp(p: P.Phrase, env: Env, store: Optional[Env] = None):  # noqa: C901
+    """Denotation of a functional expression phrase.
+
+    ``store`` optionally resolves ``ExpPart`` reads of imperative variables —
+    used when the same evaluator serves as the expression (r-value) evaluator
+    of the imperative backend (paper Fig. 6c).
+    """
+    rec = lambda q: interp(q, env, store)  # noqa: E731
+
+    if isinstance(p, P.Var):
+        try:
+            return env[p.name]
+        except KeyError:
+            raise NameError(f"unbound DPIA variable {p.name!r}") from None
+    if isinstance(p, P.ExpPart):
+        v = p.v
+        if isinstance(v, P.VView):
+            return rec(v.exp)
+        assert isinstance(v, P.Var), "ExpPart of non-variable"
+        src = store if store is not None and v.name in store else env
+        return src[v.name]
+    if isinstance(p, P.Lit):
+        shp = shape_of(p.d)
+        if shp:
+            return jnp.full(shp, p.value, dtype=dtype_of(p.d))
+        return jnp.asarray(p.value, dtype=dtype_of(p.d))
+    if isinstance(p, P.UnOp):
+        return _UNOPS[p.op](rec(p.e))
+    if isinstance(p, P.BinOp):
+        return _BINOPS[p.op](rec(p.a), rec(p.b))
+    if isinstance(p, P.Map):
+        xs = rec(p.e)
+        d = P.exp_data(p.e)
+        assert isinstance(d, Arr)
+        x = P.Var(P.fresh("x"), ExpT(d.elem))
+        body = p.f(x)
+
+        def apply_elem(xv):
+            return interp(body, {**env, x.name: xv}, store)
+
+        return jax.vmap(apply_elem)(xs)
+    if isinstance(p, P.Reduce):
+        xs = rec(p.e)
+        init = rec(p.init)
+        d = P.exp_data(p.e)
+        assert isinstance(d, Arr)
+        x = P.Var(P.fresh("x"), ExpT(d.elem))
+        acc = P.Var(P.fresh("acc"), P.type_of(p.init))
+        body = p.f(x, acc)
+
+        def step(carry, xv):
+            out = interp(body, {**env, x.name: xv, acc.name: carry}, store)
+            return out, None
+
+        final, _ = jax.lax.scan(step, init, xs)
+        return final
+    if isinstance(p, P.Zip):
+        return (rec(p.a), rec(p.b))
+    if isinstance(p, P.Split):
+        v = rec(p.e)
+        return jax.tree_util.tree_map(
+            lambda l: l.reshape((l.shape[0] // p.n, p.n) + l.shape[1:]), v)
+    if isinstance(p, P.Join):
+        v = rec(p.e)
+        return jax.tree_util.tree_map(
+            lambda l: l.reshape((l.shape[0] * l.shape[1],) + l.shape[2:]), v)
+    if isinstance(p, P.PairE):
+        return (rec(p.a), rec(p.b))
+    if isinstance(p, P.Fst):
+        return rec(p.e)[0]
+    if isinstance(p, P.Snd):
+        return rec(p.e)[1]
+    if isinstance(p, P.IdxE):
+        v = rec(p.e)
+        i = rec(p.i)
+        return jax.tree_util.tree_map(lambda l: l[i], v)
+    if isinstance(p, P.AsVector):
+        v = rec(p.e)
+        return v.reshape((v.shape[0] // p.w, p.w))
+    if isinstance(p, P.AsScalar):
+        v = rec(p.e)
+        return v.reshape((v.shape[0] * v.shape[1],))
+    if isinstance(p, P.Transpose):
+        v = rec(p.e)
+        return jax.tree_util.tree_map(lambda l: jnp.swapaxes(l, 0, 1), v)
+    if isinstance(p, P.DotBlock):
+        a, b = rec(p.a), rec(p.b)
+        return jnp.matmul(a, b, preferred_element_type=p.acc_dtype)
+    if isinstance(p, P.FullReduce):
+        v = rec(p.e)
+        return jnp.sum(v) if p.op == "add" else jnp.max(v)
+    if isinstance(p, P.ToMem):
+        return rec(p.e)
+    raise TypeError(f"interp: not a functional expression: {type(p).__name__}")
+
+
+def interp_fn(expr: P.Phrase, arg_vars):
+    """Close an expression over named argument Vars -> python callable."""
+    names = [v.name for v in arg_vars]
+
+    def fn(*vals):
+        return interp(expr, dict(zip(names, vals)))
+
+    return fn

@@ -1,0 +1,507 @@
+"""Stage III (Pallas backend): grid-level DPIA -> pl.pallas_call kernels.
+
+The TPU re-basing of the paper's OpenCL code generator (section 6):
+
+  * ``parfor[grid(k)]`` nests  ->  Pallas grid dimensions (the paper's
+    parforWorkgroup/parforLocal -> get_group_id/get_local_id loops);
+  * the SCIR acceptor discipline -> disjoint explicit stores into the output
+    ref, with index paths computed exactly as in Fig. 6b;
+  * ``new[vmem]``   -> kernel scratch (the paper's hoisted local allocations);
+  * ``new[reg]``    -> loop-carried SSA values (TPU: VREG accumulators);
+  * ``for``         -> in-kernel ``lax.fori_loop``;
+  * non-grid top-level commands -> host-side execution (the paper's host code
+    between kernel launches), with HBM temporaries as jnp buffers.
+
+Kernels are emitted for the *target* TPU (pl.pallas_call + grid + scratch)
+and validated on CPU with ``interpret=True``.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import phrases as P
+from . import stage1, stage2
+from .interp import interp
+from .stage3_jnp import (FST, SND, Store, _reshape_leading, exec_comm,
+                         fold_acc, set_path, written_roots)
+from .types import (AccT, Arr, DataType, ExpT, Idx, Num, Pair, VarT, Vec,
+                    dtype_of, shape_of, zero_value)
+
+try:  # pltpu provides VMEM scratch shapes; interpret mode accepts them on CPU
+    from jax.experimental.pallas import tpu as pltpu
+
+    def _scratch(shape, dtype):
+        return pltpu.VMEM(shape if shape else (1,), jnp.dtype(dtype))
+except Exception:  # pragma: no cover - fallback for older jax
+    pltpu = None
+
+    def _scratch(shape, dtype):
+        return jax.ShapeDtypeStruct(shape if shape else (1,), jnp.dtype(dtype))
+
+
+# ---------------------------------------------------------------------------
+# helpers: data types <-> ref pytrees
+# ---------------------------------------------------------------------------
+
+def _leaf_shapes(d: DataType):
+    """Pytree of (shape, dtype) mirroring the buffer layout of ``d``."""
+    if isinstance(d, (Num, Idx)):
+        return ((), dtype_of(d))
+    if isinstance(d, Vec):
+        return ((d.n,), d.dtype)
+    if isinstance(d, Arr):
+        inner = _leaf_shapes(d.elem)
+        return jax.tree_util.tree_map(
+            lambda sd: ((d.n,) + sd[0], sd[1]), inner,
+            is_leaf=lambda x: isinstance(x, tuple) and len(x) == 2
+            and isinstance(x[0], tuple))
+    if isinstance(d, Pair):
+        return (_leaf_shapes(d.fst), _leaf_shapes(d.snd))
+    raise TypeError(d)
+
+
+def _flat_leaf_shapes(d: DataType) -> List[Tuple[Tuple[int, ...], str]]:
+    out: List[Tuple[Tuple[int, ...], str]] = []
+
+    def go(n):
+        if isinstance(n, tuple) and len(n) == 2 and isinstance(n[0], tuple) \
+                and all(isinstance(x, int) for x in n[0]):
+            out.append(n)
+        else:
+            for c in n:
+                go(c)
+
+    go(_leaf_shapes(d))
+    return out
+
+
+def _rebuild_tree(d: DataType, leaves_iter):
+    if isinstance(d, Pair):
+        return (_rebuild_tree(d.fst, leaves_iter),
+                _rebuild_tree(d.snd, leaves_iter))
+    if isinstance(d, Arr):
+        # arrays don't change the pair structure
+        return _rebuild_tree(_strip_arr(d), leaves_iter) \
+            if isinstance(_strip_arr(d), Pair) else next(leaves_iter)
+    return next(leaves_iter)
+
+
+def _strip_arr(d: DataType) -> DataType:
+    while isinstance(d, Arr):
+        d = d.elem
+    return d
+
+
+# ---------------------------------------------------------------------------
+# the kernel-body executor
+# ---------------------------------------------------------------------------
+
+class _LazyRefStore:
+    """dict-like store whose values are loaded from refs on read, so the
+    functional interpreter (Fig. 6c evaluator) works unchanged in-kernel."""
+
+    def __init__(self, refs: Dict[str, object]):
+        self.refs = refs
+
+    def __contains__(self, name):
+        return name in self.refs
+
+    def __getitem__(self, name):
+        return jax.tree_util.tree_map(lambda r: r[...], self.refs[name])
+
+
+def _ref_write(ref, path, value):
+    """Write ``value`` into ``ref`` at ``path`` (ints / ('ds',s,w) / fst|snd)."""
+    if isinstance(ref, tuple):
+        for k, comp in enumerate(path):
+            if comp in (FST, SND):
+                b = 0 if comp == FST else 1
+                _ref_write(ref[b], list(path[:k]) + list(path[k + 1:]), value)
+                return
+        for r, v in zip(ref, value):
+            _ref_write(r, path, v)
+        return
+    idx = tuple(pl.ds(c[1], c[2]) if isinstance(c, tuple) and c[0] == "ds"
+                else c for c in path)
+    val = jnp.asarray(value, ref.dtype)
+    if idx:
+        ref[idx] = val
+    else:
+        ref[...] = val.reshape(ref.shape)
+
+
+class _KernelCtx:
+    """State while tracing one kernel body."""
+
+    def __init__(self, kenv, refs, bindings, scratch_iter):
+        self.kenv = kenv            # name -> value (inputs, indices, REG cells)
+        self.refs = refs            # name -> ref pytree (outputs, scratch)
+        self.bindings = bindings    # acceptor-parameter name -> acceptor phrase
+        self.scratch_iter = scratch_iter
+        self.reg_names = set()
+
+    def eval(self, e):
+        return interp(e, self.kenv, _LazyRefStore(self.refs))
+
+
+def _exec_kernel(p: P.Phrase, ctx: _KernelCtx) -> None:  # noqa: C901
+    if isinstance(p, P.Skip):
+        return
+    if isinstance(p, P.SeqC):
+        _exec_kernel(p.c1, ctx)
+        _exec_kernel(p.c2, ctx)
+        return
+    if isinstance(p, P.Assign):
+        value = ctx.eval(p.e)
+        _kwrite(p.a, [], value, ctx)
+        return
+    if isinstance(p, P.New):
+        v = P.Var(P.fresh("kbuf"), VarT(p.d))
+        if p.space == P.REG:
+            ctx.kenv[v.name] = zero_value(p.d)
+            ctx.reg_names.add(v.name)
+            _exec_kernel(p.f(v), ctx)
+            ctx.kenv.pop(v.name, None)
+            ctx.reg_names.discard(v.name)
+        else:  # vmem (and any hbm remnants) -> scratch refs
+            refs = next(ctx.scratch_iter)
+            ctx.refs[v.name] = refs
+            _exec_kernel(p.f(v), ctx)
+            del ctx.refs[v.name]
+        return
+    if isinstance(p, P.For):
+        i = P.Var(P.fresh("i"), ExpT(Idx(p.n)))
+        body = p.f(i)
+        regs = sorted(r for r in written_roots(body) if r in ctx.reg_names)
+
+        if p.unroll:
+            for k in range(p.n):
+                ctx.kenv[i.name] = jnp.asarray(k, "int32")
+                _exec_kernel(body, ctx)
+            ctx.kenv.pop(i.name, None)
+            return
+
+        carry0 = tuple(ctx.kenv[r] for r in regs)
+
+        def loop_body(k, carry):
+            ctx.kenv[i.name] = k
+            for r, c in zip(regs, carry):
+                ctx.kenv[r] = c
+            _exec_kernel(body, ctx)
+            return tuple(ctx.kenv[r] for r in regs)
+
+        final = jax.lax.fori_loop(0, p.n, loop_body, carry0)
+        for r, c in zip(regs, final):
+            ctx.kenv[r] = c
+        ctx.kenv.pop(i.name, None)
+        return
+    if isinstance(p, P.ParFor):
+        # deeper parallel loops inside a kernel run sequentially on this core
+        # (the strategy put them below the grid level on purpose)
+        i = P.Var(P.fresh("i"), ExpT(Idx(p.n)))
+        o = P.Var(P.fresh("o"), AccT(p.d))
+        body = p.f(i, o)
+        regs = sorted(r for r in written_roots(body) if r in ctx.reg_names)
+        ctx.bindings[o.name] = None  # placeholder; set per-iteration below
+        carry0 = tuple(ctx.kenv[r] for r in regs)
+
+        def loop_body(k, carry):
+            ctx.kenv[i.name] = k
+            ctx.bindings[o.name] = P.IdxAcc(p.a, P.Var(i.name, ExpT(Idx(p.n))))
+            for r, c in zip(regs, carry):
+                ctx.kenv[r] = c
+            _exec_kernel(body, ctx)
+            return tuple(ctx.kenv[r] for r in regs)
+
+        final = jax.lax.fori_loop(0, p.n, loop_body, carry0)
+        for r, c in zip(regs, final):
+            ctx.kenv[r] = c
+        ctx.kenv.pop(i.name, None)
+        ctx.bindings.pop(o.name, None)
+        return
+    if isinstance(p, (P.MapI, P.ReduceI)):
+        _exec_kernel(stage2.expand(p), ctx)
+        return
+    raise TypeError(f"_exec_kernel: not a command {type(p).__name__}")
+
+
+def _kwrite(a: P.Phrase, idxs: List, value, ctx: _KernelCtx) -> None:
+    """In-kernel acceptor write: REG cells rebind, refs store."""
+    # chase bound acceptor parameters (the o of each enclosing parfor)
+    while isinstance(a, P.Var) and a.name in ctx.bindings:
+        a = ctx.bindings[a.name]
+
+    def leaf(root, path, val):
+        if isinstance(root, P.Var):
+            name = root.name
+        else:  # AccPart
+            name = root.v.name
+        if name in ctx.bindings:
+            _kwrite(ctx.bindings[name], path, val, ctx)
+            return None
+        if name in ctx.reg_names:
+            ctx.kenv[name] = set_path(ctx.kenv[name], path, val)
+            return None
+        if name in ctx.refs:
+            _ref_write(ctx.refs[name], path, val)
+            return None
+        raise KeyError(f"kernel write to unknown root {name!r}")
+
+    fold_acc(a, idxs, value, ctx.eval, leaf)
+
+
+# ---------------------------------------------------------------------------
+# kernel stage construction
+# ---------------------------------------------------------------------------
+
+def _collect_grid(pf: P.ParFor):
+    """Peel nested grid parfors; returns (grid_dims, i_vars, body, out_acc)."""
+    dims: List[int] = []
+    ivars: List[P.Var] = []
+    bindings: Dict[str, P.Phrase] = {}
+    node: P.Phrase = pf
+    out_acc = pf.a
+    while isinstance(node, P.ParFor) and node.level.kind in ("grid", "par"):
+        i = P.Var(P.fresh("g"), ExpT(Idx(node.n)))
+        o = P.Var(P.fresh("go"), AccT(node.d))
+        dims.append(node.n)
+        ivars.append(i)
+        body = node.f(i, o)
+        bindings[o.name] = P.IdxAcc(node.a, i)
+        node = body
+    return dims, ivars, node, bindings
+
+
+def _free_exp_vars(p: P.Phrase) -> Dict[str, DataType]:
+    """Free expression-typed identifiers of a phrase (kernel inputs)."""
+    found: Dict[str, DataType] = {}
+
+    def go(q, bound):
+        if isinstance(q, P.Var) and isinstance(q.t, ExpT):
+            if q.name not in bound:
+                found[q.name] = q.t.d
+            return
+        if isinstance(q, P.ExpPart) and isinstance(q.v, P.Var):
+            if q.v.name not in bound:
+                found[q.v.name] = q.v.t.d
+            return
+        for attr in ("e", "a", "b", "i", "v", "c1", "c2", "init", "acc", "exp"):
+            c = getattr(q, attr, None)
+            if isinstance(c, P.Phrase):
+                go(c, bound)
+        # binders
+        if isinstance(q, P.New):
+            v = P.Var(P.fresh("v"), VarT(q.d))
+            go(q.f(v), bound | {v.name})
+        elif isinstance(q, P.For):
+            i = P.Var(P.fresh("i"), ExpT(Idx(q.n)))
+            go(q.f(i), bound | {i.name})
+        elif isinstance(q, P.ParFor):
+            i = P.Var(P.fresh("i"), ExpT(Idx(q.n)))
+            o = P.Var(P.fresh("o"), AccT(q.d))
+            go(q.f(i, o), bound | {i.name, o.name})
+        elif isinstance(q, P.Map):
+            d = P.exp_data(q.e)
+            x = P.Var(P.fresh("x"), ExpT(d.elem))
+            go(q.f(x), bound | {x.name})
+        elif isinstance(q, P.Reduce):
+            d = P.exp_data(q.e)
+            x = P.Var(P.fresh("x"), ExpT(d.elem))
+            acc = P.Var(P.fresh("acc"), P.type_of(q.init))
+            go(q.f(x, acc), bound | {x.name, acc.name})
+        elif isinstance(q, (P.MapI, P.ReduceI)):
+            go(stage2.expand(q), bound)
+
+    go(p, set())
+    return found
+
+
+def _collect_scratch(body: P.Phrase) -> List[DataType]:
+    """Data types of non-REG News in deterministic traversal order."""
+    out: List[DataType] = []
+
+    def go(q):
+        if isinstance(q, P.SeqC):
+            go(q.c1)
+            go(q.c2)
+        elif isinstance(q, P.New):
+            if q.space != P.REG:
+                out.append(q.d)
+            go(q.f(P.Var(P.fresh("v"), VarT(q.d))))
+        elif isinstance(q, P.For):
+            go(q.f(P.Var(P.fresh("i"), ExpT(Idx(q.n)))))
+        elif isinstance(q, P.ParFor):
+            go(q.f(P.Var(P.fresh("i"), ExpT(Idx(q.n))),
+                   P.Var(P.fresh("o"), AccT(q.d))))
+        elif isinstance(q, (P.MapI, P.ReduceI)):
+            go(stage2.expand(q))
+
+    go(body)
+    return out
+
+
+def _run_kernel_stage(pf: P.ParFor, env: Dict, store: Store,
+                      interpret: bool) -> Store:
+    from .stage3_jnp import acc_root
+
+    dims, ivars, body, bindings = _collect_grid(pf)
+    root = acc_root(pf.a)
+    out_buf = store[root]
+
+    inputs = _free_exp_vars(body)
+    # split inputs into those from env (kernel args) vs store (host temps)
+    in_names, in_vals = [], []
+    for name in sorted(inputs):
+        if name in env:
+            in_names.append(name)
+            in_vals.append(env[name])
+        elif name in store:
+            in_names.append(name)
+            in_vals.append(store[name])
+        # loop indices of enclosing host loops arrive via env too
+
+    # flatten input pytrees into individual refs
+    flat_vals, in_treedefs = [], []
+    for v in in_vals:
+        leaves, treedef = jax.tree_util.tree_flatten(v)
+        leaves = [jnp.reshape(l, (1,)) if l.ndim == 0 else l for l in leaves]
+        flat_vals.append(leaves)
+        in_treedefs.append(treedef)
+
+    out_leaves, out_treedef = jax.tree_util.tree_flatten(out_buf)
+    out_shape = [jax.ShapeDtypeStruct(l.shape, l.dtype) for l in out_leaves]
+
+    scratch_types = _collect_scratch(body)
+    scratch_shapes = []
+    scratch_layout = []  # list of (num_leaves, treedef builder info)
+    for d in scratch_types:
+        leaf_specs = _flat_leaf_shapes(d)
+        scratch_layout.append((d, len(leaf_specs)))
+        for shape, dtype in leaf_specs:
+            scratch_shapes.append(_scratch(shape, dtype))
+
+    n_in = sum(len(f) for f in flat_vals)
+    grid = tuple(dims) if dims else (1,)
+
+    def kernel(*refs):
+        in_refs = refs[:n_in]
+        out_refs = refs[n_in:n_in + len(out_leaves)]
+        scratch_refs = refs[n_in + len(out_leaves):]
+
+        # rebuild input values (loaded whole; VMEM staging is explicit via
+        # the strategy's toVMEM -> scratch copies)
+        kenv: Dict[str, object] = {}
+        pos = 0
+        for name, leaves, treedef, orig in zip(
+                in_names, flat_vals, in_treedefs, in_vals):
+            vals = []
+            for l in leaves:
+                r = in_refs[pos]
+                v = r[...]
+                orig_leaf = jax.tree_util.tree_leaves(orig)[len(vals)]
+                if orig_leaf.ndim == 0:
+                    v = v[0]
+                vals.append(v)
+                pos += 1
+            kenv[name] = jax.tree_util.tree_unflatten(treedef, vals)
+
+        for k, iv in enumerate(ivars):
+            kenv[iv.name] = pl.program_id(k) if dims else jnp.int32(0)
+
+        out_ref_tree = jax.tree_util.tree_unflatten(out_treedef, list(out_refs))
+
+        # group scratch refs per New
+        scratch_tree: List[object] = []
+        si = 0
+        for d, nleaf in scratch_layout:
+            leaves = list(scratch_refs[si:si + nleaf])
+            si += nleaf
+            scratch_tree.append(_build_ref_tree(d, iter(leaves)))
+
+        ctx = _KernelCtx(kenv, {root: out_ref_tree}, dict(bindings),
+                         iter(scratch_tree))
+        _exec_kernel(body, ctx)
+
+    flat_all = [l for f in flat_vals for l in f]
+    result = pl.pallas_call(
+        kernel,
+        out_shape=out_shape,
+        grid=grid,
+        scratch_shapes=scratch_shapes,
+        interpret=interpret,
+    )(*flat_all)
+    if not isinstance(result, (list, tuple)):
+        result = [result]
+    new_out = jax.tree_util.tree_unflatten(out_treedef, list(result))
+    out_store = dict(store)
+    out_store[root] = new_out
+    return out_store
+
+
+def _build_ref_tree(d: DataType, leaves_iter):
+    if isinstance(_strip_arr(d), Pair):
+        core = _strip_arr(d)
+        return (_build_ref_tree(core.fst, leaves_iter),
+                _build_ref_tree(core.snd, leaves_iter))
+    return next(leaves_iter)
+
+
+# ---------------------------------------------------------------------------
+# host-side executor: like stage3_jnp.exec_comm but grid parfors -> kernels
+# ---------------------------------------------------------------------------
+
+def exec_host(p: P.Phrase, env: Dict, store: Store, interpret: bool) -> Store:
+    if isinstance(p, P.ParFor) and p.level.kind in ("grid", "par"):
+        return _run_kernel_stage(p, env, store, interpret)
+    if isinstance(p, P.SeqC):
+        return exec_host(p.c2, env,
+                         exec_host(p.c1, env, store, interpret), interpret)
+    if isinstance(p, P.New):
+        v = P.Var(P.fresh("hbuf"), VarT(p.d))
+        store2 = dict(store)
+        store2[v.name] = zero_value(p.d)
+        store3 = exec_host(p.f(v), env, store2, interpret)
+        store3 = dict(store3)
+        del store3[v.name]
+        return store3
+    if isinstance(p, (P.MapI, P.ReduceI)):
+        return exec_host(stage2.expand(p), env, store, interpret)
+    # everything else (assignments, sequential loops) runs host-side
+    return exec_comm(p, env, store)
+
+
+# ---------------------------------------------------------------------------
+# driver
+# ---------------------------------------------------------------------------
+
+def compile_expr_pallas(expr: P.Phrase, arg_vars, *, interpret: bool = True,
+                        check: bool = True):
+    """Functional expression -> callable running grid strategies as Pallas
+    kernels (Stage I -> II -> kernel extraction)."""
+    from . import check as chk
+    from . import hoist as hoist_mod
+
+    d = P.exp_data(expr)
+    out = P.Var("out#", AccT(d))
+    cmd = stage2.expand(stage1.translate(expr, out))
+    # SCIR check happens BEFORE hoisting (as in the paper, where section 6.4 is
+    # a code-generation step downstream of the type system; hoisting preserves
+    # race freedom by construction — each iteration owns its indexed slice).
+    if check:
+        P.type_of(cmd)
+        chk.check_race_free(cmd)
+    # paper 6.4: HBM temporaries must be allocated outside kernels
+    cmd = hoist_mod.hoist(cmd, spaces=(P.HBM,))
+    names = [v.name for v in arg_vars]
+
+    def fn(*args):
+        env = dict(zip(names, args))
+        store: Store = {"out#": zero_value(d)}
+        store = exec_host(cmd, env, store, interpret)
+        return store["out#"]
+
+    return fn

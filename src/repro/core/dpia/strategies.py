@@ -1,0 +1,120 @@
+"""Semantics-preserving strategy rewrites (Steuwer et al. 2015 layer).
+
+The paper assumes parallelisation strategies are *derived* at the functional
+level by semantics-preserving rewriting and only then compiled.  These are the
+rewrite rules we use, each a function Expr -> Expr whose oracle-equality is
+property-tested (tests/test_dpia_strategies.py):
+
+  split_join   map f xs            = join (map (map f) (split b xs))
+  blocked_reduce (assoc f, unit z)
+               reduce f z xs       = reduce f z (map (reduce f z) (split b xs))
+  fuse_map_into_reduce
+               reduce f z (map g xs) = reduce (λx a. f (g x) a) z xs
+  vectorize    map (scalar op) xs  = asScalar (map (vector op) (asVector w xs))
+  distribute   assign mesh/grid/seq levels to maps/reduces
+  stage_vmem   wrap an expression so its materialisation lands in VMEM
+
+plus a tiny exhaustive strategy search used by the benchmarks (the analogue
+of the ICFP'15 stochastic search, feasible here because our kernels have a
+small, structured strategy space).
+"""
+from __future__ import annotations
+
+import itertools
+from dataclasses import replace as dc_replace
+from typing import Callable, Iterable, List, Optional
+
+from . import phrases as P
+from .types import Arr, Num, Pair, Vec
+
+
+def split_join(m: P.Map, b: int) -> P.Phrase:
+    """map f xs  ->  join (map[level] (map f) (split b xs))."""
+    d = P.exp_data(m.e)
+    assert isinstance(d, Arr) and d.n % b == 0
+    return P.Join(P.Map(
+        lambda blk: P.Map(m.f, blk, level=P.SEQ, space=m.space),
+        P.Split(b, m.e),
+        level=m.level))
+
+
+def blocked_reduce(r: P.Reduce, b: int, *,
+                   partial_level: Optional[P.Par] = None,
+                   combine=None) -> P.Phrase:
+    """reduce f z xs -> reduce g z (map (reduce f z) (split b xs)).
+
+    ``g`` (``combine``) merges per-block partials; it defaults to ``f`` when
+    the reducer is homogeneous (d1 == d2).  Caller asserts associativity of
+    the combine with unit z (the rewrite system's semantic side condition,
+    as in the paper's provenance)."""
+    d = P.exp_data(r.e)
+    assert isinstance(d, Arr) and d.n % b == 0
+    g = combine or r.f
+    return P.Reduce(
+        g, r.init,
+        P.Map(lambda blk: P.Reduce(r.f, r.init, blk, level=P.SEQ),
+              P.Split(b, r.e),
+              level=partial_level or P.PAR),
+        level=r.level)
+
+
+def fuse_map_into_reduce(r: P.Reduce) -> P.Phrase:
+    """reduce f z (map g xs) -> reduce (λx a. f (g x) a) z xs."""
+    m = r.e
+    assert isinstance(m, P.Map), "reduce input is not a map"
+    return P.Reduce(lambda x, a: r.f(m.f(x), a), r.init, m.e, level=r.level)
+
+
+def vectorize(m: P.Map, w: int) -> P.Phrase:
+    """map f xs -> asScalar (map f_vec (asVector w xs)) for pointwise f.
+
+    Our UnOp/BinOp are already elementwise at vector types, so ``f`` applied
+    to a vector element *is* f_vec — the paper's asVector story (section 6.2),
+    with w = TPU lane width rather than OpenCL's float4."""
+    d = P.exp_data(m.e)
+    assert isinstance(d, Arr) and isinstance(d.elem, Num) and d.n % w == 0
+    return P.AsScalar(P.Map(m.f, P.AsVector(w, m.e), level=m.level))
+
+
+def with_level(e: P.Phrase, level: P.Par) -> P.Phrase:
+    """Assign an execution level to the outermost map/reduce."""
+    if isinstance(e, P.Map):
+        return P.Map(e.f, e.e, level=level, space=e.space)
+    if isinstance(e, P.Reduce):
+        return P.Reduce(e.f, e.init, e.e, level=level)
+    raise TypeError("with_level: not a map/reduce")
+
+
+def stage_vmem(e: P.Phrase) -> P.Phrase:
+    """toVMEM wrapper: materialise the value in VMEM (paper's toLocal)."""
+    return P.ToMem(P.VMEM, e)
+
+
+# ---------------------------------------------------------------------------
+# strategy enumeration / search (the ICFP'15 search, miniaturised)
+# ---------------------------------------------------------------------------
+
+def enumerate_dot_strategies(n: int, blocks: Iterable[int] = (256, 1024, 2048),
+                             lanes: Iterable[int] = (128,)) -> List[dict]:
+    """Strategy space for dot-product-like reductions of length n."""
+    out = []
+    for b in blocks:
+        if n % b:
+            continue
+        out.append({"block": b, "vector": None})
+        for w in lanes:
+            if b % w == 0:
+                out.append({"block": b, "vector": w})
+    return out
+
+
+def search(candidates: List[P.Phrase], cost_fn: Callable[[P.Phrase], float]
+           ) -> P.Phrase:
+    """Pick the candidate strategy minimising ``cost_fn`` (compiled cost)."""
+    best, best_c = None, float("inf")
+    for c in candidates:
+        cost = cost_fn(c)
+        if cost < best_c:
+            best, best_c = c, cost
+    assert best is not None
+    return best

@@ -1,0 +1,155 @@
+"""Fault tolerance: step watchdog (straggler detection), NaN guards with
+step retry, auto-resume from the latest checkpoint, and elastic re-meshing.
+
+At 1000+ nodes the failure model is: slow host (straggler), dead host
+(restart), corrupted step (NaN/inf from flaky HBM).  The pieces here:
+
+  * Watchdog       — per-step deadline; on breach it records the straggler
+                     event (hook point for re-scheduling / pre-emption).
+  * guard_update   — reject non-finite losses/grad-norms; the caller skips
+                     the update (step retried with the next data batch —
+                     deterministic data makes this reproducible).
+  * TrainLoop      — checkpoint every N steps (async), restore-latest on
+                     entry, bounded retry on exceptions.
+  * elastic_remesh — rebuild a mesh from the currently-available device set
+                     and re-place a host-resident checkpoint onto it.
+"""
+from __future__ import annotations
+
+import logging
+import threading
+import time
+from typing import Callable, Dict, Optional
+
+import jax
+import numpy as np
+
+log = logging.getLogger("repro.ft")
+
+
+class Watchdog:
+    """Flags steps exceeding ``deadline_s`` (straggler mitigation hook)."""
+
+    def __init__(self, deadline_s: float = 300.0,
+                 on_straggler: Optional[Callable[[int, float], None]] = None):
+        self.deadline = deadline_s
+        self.on_straggler = on_straggler or (
+            lambda step, dt: log.warning(
+                "step %d exceeded deadline (%.1fs > %.1fs) — straggler "
+                "suspected", step, dt, self.deadline))
+        self.events = []
+        self._armed_at: Optional[float] = None
+        self._step = 0
+        self._timer: Optional[threading.Timer] = None
+
+    def arm(self, step: int) -> None:
+        self.disarm()
+        self._step = step
+        self._armed_at = time.monotonic()
+        self._timer = threading.Timer(self.deadline, self._fire)
+        self._timer.daemon = True
+        self._timer.start()
+
+    def _fire(self) -> None:
+        dt = time.monotonic() - (self._armed_at or time.monotonic())
+        self.events.append((self._step, dt))
+        self.on_straggler(self._step, dt)
+
+    def disarm(self) -> None:
+        if self._timer is not None:
+            self._timer.cancel()
+            self._timer = None
+
+
+def guard_update(metrics: Dict) -> bool:
+    """True if the step's numerics are sane (update may be applied)."""
+    loss = float(metrics.get("loss", 0.0))
+    gn = float(metrics.get("grad_norm", 0.0))
+    return bool(np.isfinite(loss) and np.isfinite(gn))
+
+
+def elastic_remesh(preferred_shape, axis_names):
+    """Build the largest mesh of ``axis_names`` that the *currently available*
+    devices support, shrinking the leading (data) axis first — elastic
+    scale-down after node loss; checkpoints re-place transparently because
+    they are stored mesh-agnostically (ckpt/manager.py)."""
+    n = len(jax.devices())
+    shape = list(preferred_shape)
+    total = int(np.prod(shape))
+    while total > n and shape[0] > 1:
+        shape[0] //= 2
+        total = int(np.prod(shape))
+    if total > n:
+        raise RuntimeError(f"not enough devices: need {total}, have {n}")
+    return jax.make_mesh(tuple(shape), tuple(axis_names))
+
+
+class TrainLoop:
+    """Checkpointed, auto-resuming, NaN-guarded train loop."""
+
+    def __init__(self, step_fn, ckpt_mgr, data, *, ckpt_every: int = 100,
+                 max_retries: int = 3, deadline_s: float = 600.0):
+        self.step_fn = step_fn
+        self.ckpt = ckpt_mgr
+        self.data = data
+        self.ckpt_every = ckpt_every
+        self.max_retries = max_retries
+        self.watchdog = Watchdog(deadline_s)
+        self.skipped_steps = 0
+
+    def run(self, state, *, num_steps: int, on_metrics=None):
+        restored = self.ckpt.restore_latest(state)
+        start = 0
+        data_state = None
+        if restored is not None:
+            start, state, extra = restored
+            data_state = extra.get("data_state")
+            log.info("resumed from checkpoint step %d", start)
+
+        from repro.data.pipeline import DataState
+        ds = (DataState.from_dict(data_state) if data_state
+              else DataState(step=start))
+        it = self.data.iterator(ds)
+
+        retries = 0
+        step = start
+        while step < num_steps:
+            batch, ds = next(it)
+            try:
+                self.watchdog.arm(step)
+                new_state, metrics = self.step_fn(state, batch)
+                metrics = jax.device_get(metrics)
+                self.watchdog.disarm()
+            except Exception:
+                self.watchdog.disarm()
+                retries += 1
+                if retries > self.max_retries:
+                    raise
+                log.exception("step %d failed; restoring last checkpoint "
+                              "(retry %d/%d)", step, retries,
+                              self.max_retries)
+                restored = self.ckpt.restore_latest(state)
+                if restored is not None:
+                    step, state, extra = restored
+                    ds = DataState.from_dict(extra.get(
+                        "data_state", {"step": step}))
+                    it = self.data.iterator(ds)
+                continue
+
+            if not guard_update(metrics):
+                # the train step suppressed the update in-graph (train/step.py
+                # 'applied' guard); record the event and move on
+                log.warning("step %d non-finite (loss=%s) — update was "
+                            "suppressed in-graph", step, metrics.get("loss"))
+                self.skipped_steps += 1
+
+            state = new_state
+            retries = 0
+            if on_metrics:
+                on_metrics(step, metrics)
+            step += 1
+            if step % self.ckpt_every == 0:
+                self.ckpt.save(step, state,
+                               extra={"data_state": ds.to_dict()})
+        self.ckpt.wait()
+        return state

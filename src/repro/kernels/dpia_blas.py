@@ -1,0 +1,169 @@
+"""The paper's benchmark ops (scal/asum/dot/gemv, section 7) + rmsnorm/matmul,
+expressed as DPIA functional terms with TPU strategies and compiled through
+the formal pipeline (Stage I -> II -> III).
+
+Each op comes in two forms:
+  * ``naive_*``    — the high-level specification (paper eq. (1) style);
+  * ``strategy_*`` — a TPU-shaped strategy (paper eq. (2)/section 6.3 style):
+    grid-blocked (`map[grid]` over `split`), whole-block VPU leaf ops (the
+    lanes level), sequential combine.
+
+Build functions return ``(expr, arg_vars)``; ``compile_op`` picks a backend.
+"""
+from __future__ import annotations
+
+from typing import List, Tuple
+
+from repro.core.dpia import phrases as P
+from repro.core.dpia import stage3_jnp, stage3_pallas
+from repro.core.dpia.types import Arr, Num
+
+Expr = P.Phrase
+
+
+# ---------------------------------------------------------------------------
+# builders
+# ---------------------------------------------------------------------------
+
+def naive_scal(n: int) -> Tuple[Expr, List[P.Var]]:
+    alpha = P.var_exp("alpha", Num())
+    xs = P.var_exp("xs", Arr(n, Num()))
+    e = P.Map(lambda x: P.mul(alpha, x), xs)
+    return e, [alpha, xs]
+
+
+def strategy_scal(n: int, block: int = 2048) -> Tuple[Expr, List[P.Var]]:
+    alpha = P.var_exp("alpha", Num())
+    xs = P.var_exp("xs", Arr(n, Num()))
+    e = P.Join(P.Map(lambda blk: P.mul(alpha, blk),
+                     P.Split(block, xs), level=P.GRID(0)))
+    return e, [alpha, xs]
+
+
+def wholeblock_scal(n: int) -> Tuple[Expr, List[P.Var]]:
+    """Single whole-array VPU block op (one grid step) — the optimal strategy
+    when the array fits one kernel invocation's streaming pass."""
+    alpha = P.var_exp("alpha", Num())
+    xs = P.var_exp("xs", Arr(n, Num()))
+    e = P.Join(P.Map(lambda blk: P.mul(alpha, blk),
+                     P.Split(n, xs), level=P.GRID(0)))
+    return e, [alpha, xs]
+
+
+def naive_asum(n: int) -> Tuple[Expr, List[P.Var]]:
+    xs = P.var_exp("xs", Arr(n, Num()))
+    e = P.Reduce(lambda x, a: P.add(a, x), P.lit(0.0),
+                 P.Map(lambda x: P.UnOp("abs", x), xs))
+    return e, [xs]
+
+
+def strategy_asum(n: int, block: int = 2048) -> Tuple[Expr, List[P.Var]]:
+    xs = P.var_exp("xs", Arr(n, Num()))
+    partials = P.Map(lambda blk: P.FullReduce("add", P.UnOp("abs", blk)),
+                     P.Split(block, xs), level=P.GRID(0))
+    e = P.Reduce(lambda x, a: P.add(a, x), P.lit(0.0), partials, level=P.SEQ)
+    return e, [xs]
+
+
+def naive_dot(n: int) -> Tuple[Expr, List[P.Var]]:
+    xs = P.var_exp("xs", Arr(n, Num()))
+    ys = P.var_exp("ys", Arr(n, Num()))
+    e = P.Reduce(lambda x, a: P.add(a, x), P.lit(0.0),
+                 P.Map(lambda z: P.mul(P.Fst(z), P.Snd(z)), P.Zip(xs, ys)))
+    return e, [xs, ys]
+
+
+def strategy_dot(n: int, block: int = 2048) -> Tuple[Expr, List[P.Var]]:
+    xs = P.var_exp("xs", Arr(n, Num()))
+    ys = P.var_exp("ys", Arr(n, Num()))
+    partials = P.Map(
+        lambda blk: P.FullReduce("add", P.mul(P.Fst(blk), P.Snd(blk))),
+        P.Split(block, P.Zip(xs, ys)), level=P.GRID(0))
+    e = P.Reduce(lambda x, a: P.add(a, x), P.lit(0.0), partials, level=P.SEQ)
+    return e, [xs, ys]
+
+
+def mesh_dot(n: int, axis: str, nshards: int, block: int = 2048
+             ) -> Tuple[Expr, List[P.Var]]:
+    """Distributed dot: mesh-map partial dots + mesh-reduce (one all-reduce)."""
+    xs = P.var_exp("xs", Arr(n, Num()))
+    ys = P.var_exp("ys", Arr(n, Num()))
+    chunk = n // nshards
+    e = P.Reduce(
+        lambda x, a: P.add(a, x), P.lit(0.0),
+        P.Map(lambda blk: P.FullReduce(
+            "add", P.mul(P.Fst(blk), P.Snd(blk))),
+            P.Split(chunk, P.Zip(xs, ys)), level=P.MESH(axis)),
+        level=P.MESH(axis))
+    return e, [xs, ys]
+
+
+def naive_gemv(m: int, n: int) -> Tuple[Expr, List[P.Var]]:
+    a = P.var_exp("A", Arr(m, Arr(n, Num())))
+    x = P.var_exp("x", Arr(n, Num()))
+    e = P.Map(lambda row: P.Reduce(
+        lambda z, acc: P.add(acc, z), P.lit(0.0),
+        P.Map(lambda p: P.mul(P.Fst(p), P.Snd(p)), P.Zip(row, x))), a)
+    return e, [a, x]
+
+
+def strategy_gemv(m: int, n: int, row_block: int = 128
+                  ) -> Tuple[Expr, List[P.Var]]:
+    a = P.var_exp("A", Arr(m, Arr(n, Num())))
+    x = P.var_exp("x", Arr(n, Num()))
+    e = P.Join(P.Map(lambda rows: P.DotBlock(rows, x),
+                     P.Split(row_block, a), level=P.GRID(0)))
+    return e, [a, x]
+
+
+def strategy_rmsnorm(rows: int, d: int, eps: float = 1e-6,
+                     row_block: int = 8) -> Tuple[Expr, List[P.Var]]:
+    """Fused rmsnorm through DPIA: per row-block, mean(x^2) -> rsqrt -> scale."""
+    xs = P.var_exp("xs", Arr(rows, Arr(d, Num())))
+    w = P.var_exp("w", Arr(d, Num()))
+
+    def per_row(row):
+        ss = P.FullReduce("add", P.mul(row, row))
+        inv = P.UnOp("rsqrt", P.add(P.div(ss, P.lit(float(d))), P.lit(eps)))
+        return P.mul(P.mul(row, inv), w)
+
+    e = P.Join(P.Map(
+        lambda blk: P.Map(per_row, blk, level=P.SEQ),
+        P.Split(row_block, xs), level=P.GRID(0)))
+    return e, [xs, w]
+
+
+def strategy_matmul(m: int, k: int, n: int, bm: int = 128, bk: int = 128
+                    ) -> Tuple[Expr, List[P.Var]]:
+    """Blocked matmul: grid over row blocks, sequential MXU accumulation over
+    k chunks (the canonical TPU matmul shape, in DPIA vocabulary)."""
+    a = P.var_exp("A", Arr(m, Arr(k, Num())))
+    b = P.var_exp("B", Arr(k, Arr(n, Num())))
+
+    def per_block(ablk):
+        # k-chunks of the A block as pure re-views (no materialisation):
+        # Split(bk, Transpose(ablk)) : (k/bk, bk, bm) — chunk^T per step.
+        zipped = P.Zip(P.Split(bk, P.Transpose(ablk)), P.Split(bk, b))
+        return P.Reduce(
+            lambda ab, acc: P.add(
+                acc, P.DotBlock(P.Transpose(P.Fst(ab)), P.Snd(ab))),
+            P.Lit(0.0, Arr(bm, Arr(n, Num()))),
+            zipped, level=P.SEQ)
+
+    e = P.Join(P.Map(per_block, P.Split(bm, a), level=P.GRID(0)))
+    return e, [a, b]
+
+
+# ---------------------------------------------------------------------------
+# compilation
+# ---------------------------------------------------------------------------
+
+def compile_op(expr: Expr, arg_vars, backend: str = "jnp", **kw):
+    if backend == "jnp":
+        return stage3_jnp.compile_expr(expr, arg_vars, **kw)
+    if backend == "pallas":
+        return stage3_pallas.compile_expr_pallas(expr, arg_vars, **kw)
+    if backend == "shardmap":
+        from repro.core.dpia import stage3_shardmap
+        return stage3_shardmap.compile_expr_shardmap(expr, arg_vars, **kw)
+    raise ValueError(f"unknown backend {backend!r}")

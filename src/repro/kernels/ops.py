@@ -1,0 +1,136 @@
+"""Public kernel API used by the model zoo.
+
+Every op has interchangeable implementations (selected per call or via
+``set_default_impl``):
+
+  'xla'         — plain jnp (XLA fuses/lowers; default for dry-run & CPU)
+  'pallas'      — hand-written Pallas kernel (TPU target; interpret on CPU)
+  'dpia-jnp'    — DPIA strategy compiled through the formal pipeline, jnp Stage III
+  'dpia-pallas' — DPIA strategy compiled to Pallas kernels
+
+The DPIA paths exist for the paper's benchmark ops; they are cached per shape.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import dpia_blas, ref
+from .flash_attention import flash_attention as _fa_pallas
+from .matmul import matmul as _mm_pallas
+from .rmsnorm import rmsnorm as _rms_pallas
+
+_DEFAULT_IMPL = "xla"
+_dpia_cache: Dict[Tuple, object] = {}
+
+
+def set_default_impl(impl: str) -> None:
+    global _DEFAULT_IMPL
+    assert impl in ("xla", "pallas", "dpia-jnp", "dpia-pallas")
+    _DEFAULT_IMPL = impl
+
+
+def _impl(impl):
+    return impl or _DEFAULT_IMPL
+
+
+def _dpia(key, builder, backend):
+    k = (key, backend)
+    if k not in _dpia_cache:
+        expr, args = builder()
+        _dpia_cache[k] = jax.jit(
+            dpia_blas.compile_op(expr, args, backend=backend))
+    return _dpia_cache[k]
+
+
+# ---- BLAS ops (paper section 7) ---------------------------------------------
+
+def scal(alpha, x, impl: str | None = None):
+    impl = _impl(impl)
+    if impl == "xla" or impl == "pallas":
+        return ref.scal(alpha, x)
+    backend = "jnp" if impl == "dpia-jnp" else "pallas"
+    fn = _dpia(("scal", x.shape), lambda: dpia_blas.strategy_scal(x.shape[0]),
+               backend)
+    return fn(jnp.asarray(alpha, x.dtype), x)
+
+
+def asum(x, impl: str | None = None):
+    impl = _impl(impl)
+    if impl in ("xla", "pallas"):
+        return ref.asum(x)
+    backend = "jnp" if impl == "dpia-jnp" else "pallas"
+    fn = _dpia(("asum", x.shape), lambda: dpia_blas.strategy_asum(x.shape[0]),
+               backend)
+    return fn(x)
+
+
+def dot(x, y, impl: str | None = None):
+    impl = _impl(impl)
+    if impl in ("xla", "pallas"):
+        return ref.dot(x, y)
+    backend = "jnp" if impl == "dpia-jnp" else "pallas"
+    fn = _dpia(("dot", x.shape), lambda: dpia_blas.strategy_dot(x.shape[0]),
+               backend)
+    return fn(x, y)
+
+
+def gemv(a, x, impl: str | None = None):
+    impl = _impl(impl)
+    if impl in ("xla", "pallas"):
+        return ref.gemv(a, x)
+    backend = "jnp" if impl == "dpia-jnp" else "pallas"
+    fn = _dpia(("gemv", a.shape),
+               lambda: dpia_blas.strategy_gemv(*a.shape), backend)
+    return fn(a, x)
+
+
+# ---- transformer ops ---------------------------------------------------------
+
+def matmul(a, b, impl: str | None = None, out_dtype=None):
+    impl = _impl(impl)
+    if impl == "pallas":
+        return _mm_pallas(a, b, out_dtype=out_dtype)
+    if impl == "dpia-pallas" or impl == "dpia-jnp":
+        backend = "pallas" if impl == "dpia-pallas" else "jnp"
+        m, k = a.shape
+        n = b.shape[1]
+        fn = _dpia(("matmul", a.shape, b.shape),
+                   lambda: dpia_blas.strategy_matmul(
+                       m, k, n, bm=min(128, m), bk=min(128, k)),
+                   backend)
+        return fn(a, b).astype(out_dtype or a.dtype)
+    return ref.matmul(a, b, out_dtype=out_dtype)
+
+
+def rmsnorm(x, w, eps: float = 1e-6, impl: str | None = None):
+    impl = _impl(impl)
+    if impl == "pallas":
+        return _rms_pallas(x, w, eps=eps)
+    if impl in ("dpia-jnp", "dpia-pallas"):
+        backend = "jnp" if impl == "dpia-jnp" else "pallas"
+        d = x.shape[-1]
+        x2 = x.reshape(-1, d)
+        fn = _dpia(("rmsnorm", x2.shape),
+                   lambda: dpia_blas.strategy_rmsnorm(x2.shape[0], d, eps),
+                   backend)
+        return fn(x2.astype(jnp.float32),
+                  w.astype(jnp.float32)).reshape(x.shape).astype(x.dtype)
+    return ref.rmsnorm(x, w, eps=eps)
+
+
+def flash_attention(q, k, v, *, causal: bool = True, scale=None,
+                    q_offset: int = 0, impl: str | None = None):
+    impl = _impl(impl)
+    if impl == "pallas":
+        return _fa_pallas(q, k, v, causal=causal, scale=scale,
+                          q_offset=q_offset)
+    return ref.flash_attention(q, k, v, causal=causal, scale=scale,
+                               q_offset=q_offset)
+
+
+def softmax(x, axis: int = -1, impl: str | None = None):
+    return ref.softmax(x, axis=axis)

@@ -1,0 +1,71 @@
+"""Pure-jnp oracles for every kernel (the reference semantics each Pallas or
+DPIA-generated implementation is tested against)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+# ---- paper section 7 benchmark ops (BLAS level 1/2) ------------------------
+
+def scal(alpha, x):
+    """BLAS scal: alpha * x."""
+    return alpha * x
+
+
+def asum(x):
+    """BLAS asum: sum of absolute values."""
+    return jnp.sum(jnp.abs(x))
+
+
+def dot(x, y):
+    """BLAS dot: sum(x * y)."""
+    return jnp.sum(x * y)
+
+
+def gemv(a, x):
+    """BLAS gemv: A @ x."""
+    return a @ x
+
+
+# ---- transformer kernels ----------------------------------------------------
+
+def matmul(a, b, *, out_dtype=None):
+    out_dtype = out_dtype or a.dtype
+    return jnp.matmul(a, b, preferred_element_type=jnp.float32).astype(out_dtype)
+
+
+def rmsnorm(x, w, eps: float = 1e-6):
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    return (x32 * jax.lax.rsqrt(var + eps)).astype(x.dtype) * w
+
+
+def softmax(x, axis: int = -1):
+    return jax.nn.softmax(x.astype(jnp.float32), axis=axis).astype(x.dtype)
+
+
+def flash_attention(q, k, v, *, causal: bool = True, scale=None,
+                    q_offset: int = 0):
+    """Reference multi-head attention with GQA.
+
+    q: (bh, sq, d); k, v: (bkv, sk, d) with bh % bkv == 0 (GQA groups).
+    ``q_offset`` positions queries within the kv sequence (decode/prefill
+    continuation): query i attends to keys <= q_offset + i.
+    """
+    bh, sq, d = q.shape
+    bkv, sk, _ = k.shape
+    assert bh % bkv == 0
+    group = bh // bkv
+    scale = scale if scale is not None else (1.0 / jnp.sqrt(d))
+    kq = jnp.repeat(k, group, axis=0)
+    vq = jnp.repeat(v, group, axis=0)
+    s = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32),
+                   kq.astype(jnp.float32)) * scale
+    if causal:
+        qpos = q_offset + jnp.arange(sq)[:, None]
+        kpos = jnp.arange(sk)[None, :]
+        s = jnp.where(kpos <= qpos, s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bqk,bkd->bqd", p, vq.astype(jnp.float32))
+    return out.astype(q.dtype)

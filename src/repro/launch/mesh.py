@@ -1,0 +1,21 @@
+"""Production meshes.  Functions (never module-level constants) so importing
+this module does not touch jax device state."""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 single pod (256 chips) or 2x16x16 two-pod (512 chips)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_mesh(shape, axes):
+    return jax.make_mesh(tuple(shape), tuple(axes))
+
+
+def make_test_mesh(n_data: int = 2, n_model: int = 2):
+    """Small mesh for CPU tests (requires forced host device count)."""
+    return jax.make_mesh((n_data, n_model), ("data", "model"))

@@ -1,0 +1,105 @@
+"""ShapeDtypeStruct stand-ins for every (arch x input-shape) cell + the
+sharding specs that go with them.  Used by the dry-run (no allocation) and by
+the roofline analyzer.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, PartitionSpec as PS
+
+from repro.models.common import ModelConfig
+from repro.models.transformer import Model
+from repro.sharding import rules
+
+# the assigned shape grid (LM-family: seq_len x global_batch)
+SHAPES: Dict[str, Dict] = {
+    "train_4k":    {"seq": 4_096,   "batch": 256, "kind": "train"},
+    "prefill_32k": {"seq": 32_768,  "batch": 32,  "kind": "prefill"},
+    "decode_32k":  {"seq": 32_768,  "batch": 128, "kind": "decode"},
+    "long_500k":   {"seq": 524_288, "batch": 1,   "kind": "decode"},
+}
+
+
+def shape_applicable(cfg: ModelConfig, shape: str) -> Tuple[bool, str]:
+    """long_500k needs sub-quadratic sequence mixing (DESIGN.md section 5)."""
+    if shape == "long_500k" and not cfg.subquadratic:
+        return False, ("long_500k skipped: pure full-attention architecture "
+                       "(O(s^2) prefill / O(s) KV per step at 524k is out of "
+                       "scope per the assignment)")
+    return True, ""
+
+
+def _dp_size(mesh: Mesh) -> int:
+    return int(np.prod([mesh.shape[a] for a in ("pod", "data")
+                        if a in mesh.shape]))
+
+
+def _batch_ps(mesh: Mesh, batch: int) -> PS:
+    dp = rules.dp_axes(mesh)
+    if dp and batch % _dp_size(mesh) == 0:
+        return PS(dp)
+    return PS(None)
+
+
+def input_specs(cfg: ModelConfig, shape: str, mesh: Optional[Mesh] = None):
+    """Returns (sds_pytree, spec_pytree) for the step function's data inputs."""
+    info = SHAPES[shape]
+    seq, batch, kind = info["seq"], info["batch"], info["kind"]
+    tok_shape = (batch, seq)
+    if cfg.n_codebooks:
+        tok_shape = tok_shape + (cfg.n_codebooks,)
+
+    if kind == "train":
+        sds = {
+            "tokens": jax.ShapeDtypeStruct(tok_shape, jnp.int32),
+            "labels": jax.ShapeDtypeStruct((batch, seq), jnp.int32),
+        }
+        if mesh is None:
+            return sds, None
+        bp = _batch_ps(mesh, batch)
+        return sds, {"tokens": bp, "labels": bp}
+
+    if kind == "prefill":
+        sds = {"tokens": jax.ShapeDtypeStruct(tok_shape, jnp.int32)}
+        if mesh is None:
+            return sds, None
+        return sds, {"tokens": _batch_ps(mesh, batch)}
+
+    # decode: one new token against a seq-long cache
+    tok1 = (batch, 1) + ((cfg.n_codebooks,) if cfg.n_codebooks else ())
+    sds = {
+        "token": jax.ShapeDtypeStruct(tok1, jnp.int32),
+        "pos": jax.ShapeDtypeStruct((), jnp.int32),
+    }
+    if mesh is None:
+        return sds, None
+    return sds, {"token": _batch_ps(mesh, batch), "pos": PS()}
+
+
+def model_for(cfg: ModelConfig, shape: str) -> Model:
+    info = SHAPES[shape]
+    cfg = dataclasses.replace(cfg, max_seq=info["seq"])
+    return Model(cfg)
+
+
+def cache_sds(model: Model, shape: str):
+    info = SHAPES[shape]
+    return jax.eval_shape(
+        lambda: model.init_cache(info["batch"], info["seq"]))
+
+
+def params_sds(model: Model):
+    key = jax.ShapeDtypeStruct((2,), jnp.uint32)
+    return jax.eval_shape(model.init_params, key)
+
+
+def train_state_sds(model: Model):
+    from repro.train.step import make_train_state
+    key = jax.ShapeDtypeStruct((2,), jnp.uint32)
+    return jax.eval_shape(
+        lambda k: make_train_state(model, k, use_8bit=model.cfg.opt_8bit), key)

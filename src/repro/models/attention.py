@@ -1,0 +1,244 @@
+"""GQA multi-head attention: train/prefill + cached decode, qk_norm, bias.
+
+Sharding intent (enforced by sharding/rules.py): head dims are split over the
+'model' mesh axis (TP); with few KV heads (GQA) the KV cache shards batch over
+'data' and heads over 'model' up to n_kv_heads, falling back to sequence
+sharding for decode (flash-decode style partial-attention + LSE merge is in
+serve/decode.py)."""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops
+from .common import ModelConfig, apply_rope, init_dense, rmsnorm, rope_freqs
+
+
+class AttnParams(NamedTuple):
+    wq: jax.Array          # (d, nh*hd)
+    wk: jax.Array          # (d, nkv*hd)
+    wv: jax.Array          # (d, nkv*hd)
+    wo: jax.Array          # (nh*hd, d)
+    bq: Optional[jax.Array]
+    bk: Optional[jax.Array]
+    bv: Optional[jax.Array]
+    q_norm: Optional[jax.Array]   # (hd,) qk_norm scales
+    k_norm: Optional[jax.Array]
+
+
+def init_attn(key, cfg: ModelConfig) -> AttnParams:
+    d, nh, nkv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    ks = jax.random.split(key, 4)
+    zeros = lambda n: jnp.zeros((n,), cfg.dtype)  # noqa: E731
+    return AttnParams(
+        wq=init_dense(ks[0], d, nh * hd, cfg.dtype),
+        wk=init_dense(ks[1], d, nkv * hd, cfg.dtype),
+        wv=init_dense(ks[2], d, nkv * hd, cfg.dtype),
+        wo=init_dense(ks[3], nh * hd, d, cfg.dtype),
+        bq=zeros(nh * hd) if cfg.qkv_bias else None,
+        bk=zeros(nkv * hd) if cfg.qkv_bias else None,
+        bv=zeros(nkv * hd) if cfg.qkv_bias else None,
+        q_norm=jnp.ones((hd,), cfg.dtype) if cfg.qk_norm else None,
+        k_norm=jnp.ones((hd,), cfg.dtype) if cfg.qk_norm else None,
+    )
+
+
+def _project_qkv(p: AttnParams, cfg: ModelConfig, x, positions):
+    """x: (b, s, d) -> q (b, s, nh, hd), k/v (b, s, nkv, hd), roped."""
+    b, s, _ = x.shape
+    nh, nkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    q = jnp.einsum("bsd,dh->bsh", x, p.wq)
+    k = jnp.einsum("bsd,dh->bsh", x, p.wk)
+    v = jnp.einsum("bsd,dh->bsh", x, p.wv)
+    if p.bq is not None:
+        q, k, v = q + p.bq, k + p.bk, v + p.bv
+    q = q.reshape(b, s, nh, hd)
+    k = k.reshape(b, s, nkv, hd)
+    v = v.reshape(b, s, nkv, hd)
+    if p.q_norm is not None:
+        q = rmsnorm(q, p.q_norm, cfg.norm_eps)
+        k = rmsnorm(k, p.k_norm, cfg.norm_eps)
+    cos, sin = rope_freqs(hd, cfg.rope_theta, positions)
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+    return q, k, v
+
+
+NEG_INF = -1e30
+
+# sequences above this use the chunked online-softmax path (flash-equivalent
+# memory behaviour in pure XLA: no S x S score tensor is ever materialised)
+CHUNKED_THRESHOLD = 1024
+KV_CHUNK = 1024
+
+
+def chunked_attention(q, k, v, *, causal: bool = True, q_offset: int = 0,
+                      kv_chunk: int = KV_CHUNK):
+    """Online-softmax attention over KV chunks (lax.scan) — the XLA-lowerable
+    flash attention used for training/prefill roofline paths; the Pallas
+    kernel (kernels/flash_attention.py) is the TPU in-kernel version of the
+    same recurrence.
+
+    q: (b, sq, nh, hd); k/v: (b, sk, nkv, hd); GQA via nh % nkv == 0.
+    """
+    b, sq, nh, hd = q.shape
+    sk, nkv = k.shape[1], k.shape[2]
+    group = nh // nkv
+    scale = 1.0 / jnp.sqrt(float(hd))
+    # keep q/k/v in their storage dtype; accumulate dots in f32 on the MXU
+    # (f32-converting the inputs materialises f32 copies of the whole k/v)
+    qg = (q * jnp.asarray(scale, q.dtype)).reshape(b, sq, nkv, group, hd)
+    n_chunks = max(sk // kv_chunk, 1)
+    kc = k.reshape(b, n_chunks, kv_chunk, nkv, hd)
+    vc = v.reshape(b, n_chunks, kv_chunk, nkv, hd)
+    qpos = q_offset + jnp.arange(sq)
+
+    def step(carry, inp):
+        acc, m_i, l_i = carry
+        j, k_j, v_j = inp                    # (b, kv_chunk, nkv, hd)
+        s = jnp.einsum("bsngh,btnh->bsngt", qg, k_j,
+                       preferred_element_type=jnp.float32)
+        if causal:
+            kpos = j * kv_chunk + jnp.arange(kv_chunk)
+            mask = kpos[None, :] <= qpos[:, None]       # (sq, kv_chunk)
+            s = jnp.where(mask[None, :, None, None, :], s, NEG_INF)
+        m_new = jnp.maximum(m_i, jnp.max(s, axis=-1))
+        p_ = jnp.exp(s - m_new[..., None])
+        alpha = jnp.exp(m_i - m_new)
+        l_new = l_i * alpha + jnp.sum(p_, axis=-1)
+        acc_new = acc * alpha[..., None] + jnp.einsum(
+            "bsngt,btnh->bsngh", p_.astype(v_j.dtype), v_j,
+            preferred_element_type=jnp.float32)
+        return (acc_new, m_new, l_new), None
+
+    # carry inits derived from qg so the scan carry INHERITS q's sharding —
+    # plain jnp.zeros is replicated and makes GSPMD unshard the whole chain
+    # (measured: full-batch attention intermediates per partition; see
+    # EXPERIMENTS.md section Perf, dbrx iteration 1)
+    acc0 = (qg * 0.0).astype(jnp.float32)
+    m0 = jnp.max(acc0, axis=-1) + NEG_INF
+    l0 = jnp.max(acc0, axis=-1)
+    idx = jnp.arange(n_chunks)
+    (acc, m_i, l_i), _ = jax.lax.scan(
+        step, (acc0, m0, l0),
+        (idx, kc.transpose(1, 0, 2, 3, 4), vc.transpose(1, 0, 2, 3, 4)))
+    l_safe = jnp.where(l_i == 0.0, 1.0, l_i)
+    out = (acc / l_safe[..., None]).reshape(b, sq, nh, hd)
+    return out
+
+
+def attention(p: AttnParams, cfg: ModelConfig, x, positions):
+    """Full self-attention over x (training / prefill without cache)."""
+    b, s, d = x.shape
+    nh, nkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    q, k, v = _project_qkv(p, cfg, x, positions)
+    if cfg.use_flash:
+        qf = q.transpose(0, 2, 1, 3).reshape(b * nh, s, hd)
+        kf = k.transpose(0, 2, 1, 3).reshape(b * nkv, s, hd)
+        vf = v.transpose(0, 2, 1, 3).reshape(b * nkv, s, hd)
+        of = ops.flash_attention(qf, kf, vf, causal=True, impl="pallas")
+        out = of.reshape(b, nh, s, hd).transpose(0, 2, 1, 3)
+    elif s > CHUNKED_THRESHOLD and s % KV_CHUNK == 0:
+        out = chunked_attention(q, k, v, causal=True)
+    else:
+        group = nh // nkv
+        qg = q.reshape(b, s, nkv, group, hd)
+        scores = jnp.einsum("bsngh,btnh->bngst", qg.astype(jnp.float32),
+                            k.astype(jnp.float32)) / jnp.sqrt(float(hd))
+        mask = jnp.tril(jnp.ones((s, s), bool))
+        scores = jnp.where(mask[None, None, None], scores, -jnp.inf)
+        probs = jax.nn.softmax(scores, axis=-1)
+        out = jnp.einsum("bngst,btnh->bsngh", probs,
+                         v.astype(jnp.float32)).reshape(b, s, nh, hd)
+    out = out.astype(x.dtype).reshape(b, s, nh * hd)
+    return jnp.einsum("bsh,hd->bsd", out, p.wo)
+
+
+class KVCache(NamedTuple):
+    k: jax.Array  # (b, max_seq, nkv, hd)
+    v: jax.Array
+    # position is tracked by the caller (same for the whole batch slice)
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int) -> KVCache:
+    shape = (batch, max_seq, cfg.n_kv_heads, cfg.hd)
+    return KVCache(jnp.zeros(shape, cfg.dtype), jnp.zeros(shape, cfg.dtype))
+
+
+def attention_prefill(p: AttnParams, cfg: ModelConfig, x, cache: KVCache,
+                      start: int = 0):
+    """Prefill: run full attention AND fill the cache at [start, start+s)."""
+    b, s, _ = x.shape
+    positions = start + jnp.arange(s)[None, :]
+    q, k, v = _project_qkv(p, cfg, x, positions)
+    new_cache = KVCache(
+        jax.lax.dynamic_update_slice(cache.k, k, (0, start, 0, 0)),
+        jax.lax.dynamic_update_slice(cache.v, v, (0, start, 0, 0)))
+    out = attention(p, cfg, x, positions)
+    return out, new_cache
+
+
+def attention_decode_inplace(p: AttnParams, cfg: ModelConfig, x, ck, cv,
+                             li, pos):
+    """One-token decode against LAYER-STACKED caches carried through the
+    layer scan: the cache update is a single token-sized dynamic-update-slice
+    on the stacked buffer (aliased in-place by XLA), instead of re-writing
+    the whole layer cache through scan outputs — 60 GB/token -> ~100 KB/token
+    of cache-write traffic at 500k context (EXPERIMENTS.md Perf, zamba2).
+
+    ck/cv: (L, b, max_seq, nkv, hd); li: layer index; returns (out, ck, cv).
+    """
+    b, _, d = x.shape
+    nh, nkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    positions = pos + jnp.zeros((b, 1), jnp.int32)
+    q, k, v = _project_qkv(p, cfg, x, positions)
+    zero = jnp.zeros((), jnp.int32)
+    ck = jax.lax.dynamic_update_slice(ck, k[None].astype(ck.dtype),
+                                      (li, zero, pos, zero, zero))
+    cv = jax.lax.dynamic_update_slice(cv, v[None].astype(cv.dtype),
+                                      (li, zero, pos, zero, zero))
+    k_l = jax.lax.dynamic_index_in_dim(ck, li, axis=0, keepdims=False)
+    v_l = jax.lax.dynamic_index_in_dim(cv, li, axis=0, keepdims=False)
+    group = nh // nkv
+    qg = q.reshape(b, nkv, group, hd)
+    scores = jnp.einsum("bngh,btnh->bngt", qg, k_l,
+                        preferred_element_type=jnp.float32) \
+        / jnp.sqrt(float(hd))
+    t = k_l.shape[1]
+    valid = jnp.arange(t)[None, None, None, :] <= pos
+    scores = jnp.where(valid, scores, -jnp.inf)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bngt,btnh->bngh", probs.astype(v_l.dtype), v_l,
+                     preferred_element_type=jnp.float32)
+    out = out.astype(x.dtype).reshape(b, 1, nh * hd)
+    return jnp.einsum("bsh,hd->bsd", out, p.wo), ck, cv
+
+
+def attention_decode(p: AttnParams, cfg: ModelConfig, x, cache: KVCache,
+                     pos):
+    """One-token decode: x (b, 1, d); attends to cache[:pos+1]."""
+    b, _, d = x.shape
+    nh, nkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    positions = pos + jnp.zeros((b, 1), jnp.int32)
+    q, k, v = _project_qkv(p, cfg, x, positions)
+    ck = jax.lax.dynamic_update_slice(cache.k, k, (0, pos, 0, 0))
+    cv = jax.lax.dynamic_update_slice(cache.v, v, (0, pos, 0, 0))
+    new_cache = KVCache(ck, cv)
+    group = nh // nkv
+    qg = q.reshape(b, nkv, group, hd)  # s=1 squeezed
+    # bf16-in / f32-accumulate einsums: converting the whole cache to f32
+    # materialised seq_len x hd x f32 copies per step (EXPERIMENTS.md Perf,
+    # zamba2 iteration 1); preferred_element_type keeps accuracy on the MXU.
+    scores = jnp.einsum("bngh,btnh->bngt", qg, ck,
+                        preferred_element_type=jnp.float32) \
+        / jnp.sqrt(float(hd))
+    t = ck.shape[1]
+    valid = jnp.arange(t)[None, None, None, :] <= pos
+    scores = jnp.where(valid, scores, -jnp.inf)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bngt,btnh->bngh", probs.astype(cv.dtype), cv,
+                     preferred_element_type=jnp.float32)
+    out = out.astype(x.dtype).reshape(b, 1, nh * hd)
+    return jnp.einsum("bsh,hd->bsd", out, p.wo), new_cache

@@ -1,0 +1,135 @@
+"""Model configuration + shared components (embeddings, norms, RoPE, init)."""
+from __future__ import annotations
+
+import dataclasses
+import math
+from dataclasses import dataclass, field
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str            # dense | moe | hybrid | ssm | vlm | audio
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    head_dim: Optional[int] = None      # defaults to d_model // n_heads
+    qk_norm: bool = False
+    qkv_bias: bool = False
+    # MoE
+    n_experts: int = 0
+    top_k: int = 0
+    moe_capacity_factor: float = 1.25
+    # SSM / hybrid
+    ssm_state: int = 0
+    attn_every: int = 0                 # hybrid: shared attn every k blocks
+    # audio (musicgen): codebooks summed at the embedding (frontend stub)
+    n_codebooks: int = 0
+    rope_theta: float = 1e4
+    norm_eps: float = 1e-6
+    dtype: str = "bfloat16"
+    # runtime / distribution knobs
+    remat: bool = True
+    fsdp: bool = False                  # ZeRO-style param+opt sharding on data
+    opt_8bit: bool = False              # 8-bit Adam moments (100B+ configs)
+    use_flash: bool = False             # pallas flash attention (TPU target)
+    max_seq: int = 4096
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    @property
+    def attn_free(self) -> bool:
+        return self.family == "ssm"
+
+    @property
+    def subquadratic(self) -> bool:
+        return self.family in ("ssm", "hybrid")
+
+    def param_count(self) -> int:
+        """Analytic parameter count (embedding included once)."""
+        d, f, v = self.d_model, self.d_ff, self.vocab
+        hd, nh, nkv = self.hd, self.n_heads, self.n_kv_heads
+        attn = d * nh * hd + 2 * d * nkv * hd + nh * hd * d
+        ffn = 3 * d * f  # SwiGLU
+        if self.n_experts:
+            ffn = self.n_experts * 3 * d * f + d * self.n_experts  # + router
+        per_layer = attn + ffn + 2 * d
+        if self.family == "ssm":        # rwkv6: time-mix + channel-mix
+            tm = d * d * 4 + d * 64 * 2 + d * 6  # r,k,v,o + lora decay + mixes
+            cm = d * f + f * d + d * d
+            per_layer = tm + cm + 2 * d
+        if self.family == "hybrid":
+            # mamba2-only layers; the SHARED block (attn + MLP) counts once
+            din = 2 * d
+            nheads_m = din // 64
+            mamba = (d * (2 * din + 2 * self.ssm_state + nheads_m)
+                     + din * d + 2 * din)
+            per_layer = mamba + d
+            shared = attn + 3 * d * f + 2 * d
+            return self.n_layers * per_layer + shared + v * d + v * d
+        emb = v * d
+        head = v * d
+        return self.n_layers * per_layer + emb + head
+
+    def active_param_count(self) -> int:
+        """Params touched per token (MoE: only top_k experts)."""
+        if not self.n_experts:
+            return self.param_count()
+        d, f = self.d_model, self.d_ff
+        dense_moe = self.n_experts * 3 * d * f
+        active_moe = self.top_k * 3 * d * f
+        return self.param_count() - self.n_layers * (dense_moe - active_moe)
+
+
+def init_dense(key, d_in: int, d_out: int, dtype: str, scale: float = None):
+    scale = scale if scale is not None else 1.0 / math.sqrt(d_in)
+    return (jax.random.normal(key, (d_in, d_out), dtype=jnp.float32)
+            * scale).astype(dtype)
+
+
+def embed_tokens(emb, tokens):
+    return jnp.take(emb, tokens, axis=0)
+
+
+def rmsnorm(x, w, eps: float = 1e-6):
+    return ops.rmsnorm(x, w, eps=eps)
+
+
+def rope_freqs(hd: int, theta: float, positions):
+    """positions: (... ,seq) int32 -> (..., seq, hd//2) cos/sin."""
+    inv = 1.0 / (theta ** (jnp.arange(0, hd, 2, dtype=jnp.float32) / hd))
+    ang = positions[..., None].astype(jnp.float32) * inv
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x, cos, sin):
+    """x: (..., seq, heads, hd); cos/sin: (..., seq, hd//2)."""
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    c = cos[..., None, :]
+    s = sin[..., None, :]
+    return jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s],
+                           axis=-1).astype(x.dtype)
+
+
+def cross_entropy(logits, labels, *, z_loss: float = 1e-4):
+    """Next-token CE in float32 with z-loss regulariser; labels -100 masked."""
+    logits = logits.astype(jnp.float32)
+    mask = labels >= 0
+    labels_safe = jnp.where(mask, labels, 0)
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels_safe[..., None],
+                             axis=-1)[..., 0] - lse
+    loss = -(ll * mask).sum() / jnp.maximum(mask.sum(), 1)
+    zl = z_loss * ((lse * mask) ** 2).sum() / jnp.maximum(mask.sum(), 1)
+    return loss + zl

@@ -1,0 +1,137 @@
+"""FFN layers: SwiGLU MLP and MoE (top-k, capacity-based GShard dispatch).
+
+The MoE einsum formulation is EP-ready: the expert dimension is sharded over
+the 'model' mesh axis (sharding/rules.py), so the dispatch/combine einsums
+lower to all_to_all-style collectives under SPMD.  The router adds the usual
+load-balance auxiliary loss."""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .common import ModelConfig, init_dense
+
+
+class MlpParams(NamedTuple):
+    w_gate: jax.Array   # (d, f)
+    w_up: jax.Array     # (d, f)
+    w_down: jax.Array   # (f, d)
+
+
+def init_mlp(key, cfg: ModelConfig, d_ff: Optional[int] = None) -> MlpParams:
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    ks = jax.random.split(key, 3)
+    return MlpParams(init_dense(ks[0], d, f, cfg.dtype),
+                     init_dense(ks[1], d, f, cfg.dtype),
+                     init_dense(ks[2], f, d, cfg.dtype))
+
+
+def mlp(p: MlpParams, x):
+    h = jax.nn.silu(jnp.einsum("bsd,df->bsf", x, p.w_gate))
+    h = h * jnp.einsum("bsd,df->bsf", x, p.w_up)
+    return jnp.einsum("bsf,fd->bsd", h, p.w_down)
+
+
+class MoeParams(NamedTuple):
+    router: jax.Array     # (d, E)
+    w_gate: jax.Array     # (E, d, f)
+    w_up: jax.Array       # (E, d, f)
+    w_down: jax.Array     # (E, f, d)
+
+
+def init_moe(key, cfg: ModelConfig) -> MoeParams:
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.n_experts
+    ks = jax.random.split(key, 4)
+    dense = lambda k, i, o: jnp.stack(  # noqa: E731
+        [init_dense(kk, i, o, cfg.dtype) for kk in jax.random.split(k, e)])
+    return MoeParams(
+        router=init_dense(ks[0], d, e, "float32"),
+        w_gate=dense(ks[1], d, f),
+        w_up=dense(ks[2], d, f),
+        w_down=jnp.stack([init_dense(kk, f, d, cfg.dtype)
+                          for kk in jax.random.split(ks[3], e)]),
+    )
+
+
+def moe(p: MoeParams, cfg: ModelConfig, x) -> Tuple[jax.Array, jax.Array]:
+    """Top-k MoE, capacity-based scatter/gather dispatch.
+
+    Dispatch/combine are scatter-adds and gathers rather than one-hot einsums:
+    the GShard-style dense dispatch costs 2.5*k*T^2*d dispatch FLOPs and a
+    (T, E, cap) tensor — ~70x the useful compute at 1M-token batches.  The
+    scatter form costs O(T*k*d) data movement and zero MXU work, leaving the
+    expert matmuls as the only dots (verified by the scan-aware HLO counter).
+    Returns (out, aux_loss).
+    """
+    from repro.sharding import ctx
+
+    b, s, d = x.shape
+    e, k = cfg.n_experts, cfg.top_k
+    t = b * s
+
+    # GShard-style GROUPS: routing/capacity computed per data-parallel group,
+    # so slot assignment (cumsum) and the dispatch scatter are group-LOCAL —
+    # no cross-shard scatter for GSPMD to turn into all-gathers
+    # (EXPERIMENTS.md section Perf, dbrx iterations 1-2).
+    g = 1
+    mesh = ctx.get_mesh()
+    if mesh is not None:
+        import numpy as np
+        dp = ctx.dp_axes() or ()
+        g = int(np.prod([mesh.shape[a] for a in dp])) or 1
+        if t % g or (t // g) < 1:
+            g = 1
+    tl = t // g
+    # capacity floor min(tl, 64): small (decode-sized) batches never drop,
+    # so cached decode agrees with full-sequence scoring
+    cap = max(int(cfg.moe_capacity_factor * tl * k / e), min(tl, 64), 1)
+
+    xg = x.reshape(g, tl, d)
+    logits = jnp.einsum("gtd,de->gte", xg.astype(jnp.float32), p.router)
+    probs = jax.nn.softmax(logits, axis=-1)
+
+    topk_p, topk_i = jax.lax.top_k(probs, k)                    # (g, tl, k)
+    topk_p = topk_p / jnp.sum(topk_p, axis=-1, keepdims=True)
+
+    # load-balance aux loss (Switch-style)
+    me = jnp.mean(probs, axis=(0, 1))                            # (e,)
+    one_hot_all = jax.nn.one_hot(topk_i, e, dtype=jnp.float32)
+    ce_frac = jnp.mean(jnp.sum(one_hot_all, axis=2), axis=(0, 1))
+    aux = e * jnp.sum(me * ce_frac) / k
+
+    # slot assignment: position within (group, expert) via group-local cumsum
+    flat_i = topk_i.reshape(g, tl * k)
+    one_hot = jax.nn.one_hot(flat_i, e, dtype=jnp.int32)         # (g, tlk, e)
+    pos = jnp.sum(jnp.cumsum(one_hot, axis=1) * one_hot, axis=-1) - 1
+    keep = pos < cap
+    gate = topk_p.reshape(g, tl * k) * keep                      # (g, tlk)
+    pos_c = jnp.clip(pos, 0, cap - 1)
+
+    # group-local scatter into (g, e, cap, d) expert buffers
+    tok_idx = jnp.repeat(jnp.arange(tl), k)                      # (tlk,)
+    xk = jnp.take(xg, tok_idx, axis=1)                           # (g, tlk, d)
+    xk = xk * keep[..., None].astype(xk.dtype)
+    g_idx = jnp.broadcast_to(jnp.arange(g)[:, None], flat_i.shape)
+    # buf stays dp-sharded on g and REPLICATED on e: the scatter is local,
+    # the expert einsum contracts against e-sharded weights (output lands
+    # e-sharded), and the only collective is one ye all-gather over 'model'
+    # before the token-side combine — ~t*k*d bytes/layer, the EP ideal
+    # (EXPERIMENTS.md section Perf, dbrx iteration 3).
+    buf = jnp.zeros((g, e, cap, d), xg.dtype)
+    buf = buf.at[g_idx, flat_i, pos_c].add(xk, mode="drop")
+    buf = ctx.constraint(buf, ctx.dp_axes(), None, None, None)
+
+    h = jax.nn.silu(jnp.einsum("gecd,edf->gecf", buf, p.w_gate))
+    h = h * jnp.einsum("gecd,edf->gecf", buf, p.w_up)
+    ye = jnp.einsum("gecf,efd->gecd", h, p.w_down)               # (g,e,cap,d)
+    ye = ctx.constraint(ye, ctx.dp_axes(), None, None, None)
+
+    # group-local gather back, combine weighted by gate
+    yk = ye[g_idx, flat_i, pos_c]                                # (g, tlk, d)
+    yk = yk * gate[..., None].astype(ye.dtype)
+    out = jnp.zeros((g, tl, d), ye.dtype).at[
+        g_idx, jnp.broadcast_to(tok_idx[None], flat_i.shape)].add(yk)
+    out = ctx.constraint(out, ctx.dp_axes(), None, None)
+    return out.reshape(b, s, d).astype(x.dtype), aux

@@ -1,0 +1,147 @@
+"""Mamba2 (SSD) mixer — the zamba2 hybrid's sequence-mixing block.
+
+Faithful structure: in-proj -> (gate z | conv'd x | B | C | dt), causal
+depthwise conv, selective state-space recurrence with per-head scalar decay
+A, gated out-proj.  The recurrence runs as a ``lax.scan`` over time (the
+DPIA reading: a ``scanI``/reduceSeq strategy); a chunked SSD formulation is
+the documented optimisation path (EXPERIMENTS.md section Perf).
+
+State per layer: conv tail (b, conv_w-1, din + 2N) and SSM state
+(b, nheads, hd, N) — constant-size, which is what makes long_500k runnable.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .common import ModelConfig, init_dense
+
+CONV_W = 4
+HD = 64  # mamba2 head dim
+
+
+class Mamba2Params(NamedTuple):
+    w_in: jax.Array       # (d, 2*din + 2N + nheads)
+    conv_w: jax.Array     # (conv_w, din + 2N)
+    a_log: jax.Array      # (nheads,)
+    dt_bias: jax.Array    # (nheads,)
+    d_skip: jax.Array     # (nheads,)
+    norm_w: jax.Array     # (din,)
+    w_out: jax.Array      # (din, d)
+
+
+def dims(cfg: ModelConfig) -> Tuple[int, int, int]:
+    din = 2 * cfg.d_model
+    nheads = din // HD
+    return din, nheads, cfg.ssm_state
+
+
+class Mamba2State(NamedTuple):
+    conv: jax.Array   # (b, CONV_W-1, din + 2N)
+    ssm: jax.Array    # (b, nheads, HD, N)
+
+
+def init_mamba2(key, cfg: ModelConfig) -> Mamba2Params:
+    d = cfg.d_model
+    din, nheads, n = dims(cfg)
+    ks = jax.random.split(key, 3)
+    return Mamba2Params(
+        w_in=init_dense(ks[0], d, 2 * din + 2 * n + nheads, cfg.dtype),
+        conv_w=(jax.random.normal(ks[1], (CONV_W, din + 2 * n)) * 0.1
+                ).astype(cfg.dtype),
+        a_log=jnp.zeros((nheads,), jnp.float32),
+        dt_bias=jnp.zeros((nheads,), jnp.float32),
+        d_skip=jnp.ones((nheads,), jnp.float32),
+        norm_w=jnp.ones((din,), cfg.dtype),
+        w_out=init_dense(ks[2], din, d, cfg.dtype),
+    )
+
+
+def init_state(cfg: ModelConfig, batch: int) -> Mamba2State:
+    din, nheads, n = dims(cfg)
+    return Mamba2State(
+        conv=jnp.zeros((batch, CONV_W - 1, din + 2 * n), cfg.dtype),
+        ssm=jnp.zeros((batch, nheads, HD, n), jnp.float32))
+
+
+def _split_proj(cfg, proj):
+    din, nheads, n = dims(cfg)
+    z, xbc, dt = jnp.split(proj, [din, 2 * din + 2 * n], axis=-1)
+    return z, xbc, dt
+
+
+def forward(p: Mamba2Params, cfg: ModelConfig, x,
+            state: Mamba2State = None):
+    """Full-sequence forward; returns (y, final_state)."""
+    b, s, d = x.shape
+    din, nheads, n = dims(cfg)
+    fresh = state is None
+
+    proj = jnp.einsum("bsd,de->bse", x, p.w_in)
+    z, xbc, dt_raw = _split_proj(cfg, proj)
+
+    # causal depthwise conv over (x|B|C) with carried tail.  Fresh-sequence
+    # zero states are derived from the activations so they INHERIT the
+    # activations' sharding — plain jnp.zeros is replicated and makes GSPMD
+    # unshard the whole scan chain (see attention.py / EXPERIMENTS.md Perf).
+    if fresh:
+        conv_state = xbc[:, :1, :] * 0
+        conv_state = jnp.broadcast_to(
+            conv_state, (b, CONV_W - 1, conv_state.shape[-1]))
+    else:
+        conv_state = state.conv
+    xbc_ext = jnp.concatenate([conv_state.astype(xbc.dtype), xbc], axis=1)
+    conv = sum(p.conv_w[i][None, None, :]
+               * jax.lax.dynamic_slice_in_dim(xbc_ext, i, s, axis=1)
+               for i in range(CONV_W))
+    conv = jax.nn.silu(conv)
+    new_conv_tail = xbc_ext[:, -(CONV_W - 1):, :]
+
+    xs_, bc = jnp.split(conv, [din], axis=-1)
+    b_in, c_in = jnp.split(bc, 2, axis=-1)                  # (b, s, N) each
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + p.dt_bias)                        # (b, s, nh)
+    a = -jnp.exp(p.a_log)                                    # (nh,)
+    da = jnp.exp(dt * a)                                     # decay per step
+
+    xh = xs_.reshape(b, s, nheads, HD).astype(jnp.float32)
+
+    def step(h, inp):
+        xh_t, b_t, c_t, da_t, dt_t = inp
+        h = h * da_t[..., None, None] + (
+            (dt_t[..., None] * xh_t)[..., None] * b_t[:, None, None, :])
+        y = jnp.einsum("bhdn,bn->bhd", h, c_t)
+        return h, y
+
+    seq = (xh.transpose(1, 0, 2, 3),
+           b_in.astype(jnp.float32).transpose(1, 0, 2),
+           c_in.astype(jnp.float32).transpose(1, 0, 2),
+           da.transpose(1, 0, 2),
+           dt.transpose(1, 0, 2))
+    if fresh:  # sharding-inheriting zero state (see above)
+        ssm0 = (xh[:, 0, :, :, None]
+                * b_in.astype(jnp.float32)[:, 0, None, None, :]) * 0
+    else:
+        ssm0 = state.ssm
+    h_final, ys = jax.lax.scan(step, ssm0, seq)
+    y = ys.transpose(1, 0, 2, 3)                             # (b, s, nh, hd)
+    y = y + p.d_skip[None, None, :, None] * xh               # skip connection
+    y = y.reshape(b, s, din).astype(x.dtype)
+
+    # gated rmsnorm (mamba2 style): norm(y * silu(z))
+    g = y * jax.nn.silu(z)
+    g32 = g.astype(jnp.float32)
+    var = jnp.mean(g32 * g32, axis=-1, keepdims=True)
+    g = (g32 * jax.lax.rsqrt(var + cfg.norm_eps)).astype(x.dtype) * p.norm_w
+
+    out = jnp.einsum("bse,ed->bsd", g, p.w_out)
+    return out, Mamba2State(new_conv_tail, h_final)
+
+
+def decode_step(p: Mamba2Params, cfg: ModelConfig, x, state: Mamba2State):
+    """Single-token step: x (b, 1, d)."""
+    y, new_state = forward(p, cfg, x, state)
+    return y, new_state

@@ -1,0 +1,101 @@
+"""AdamW with global-norm clipping, cosine schedule, and optional 8-bit
+moments (per-tensor-scaled int8) for 100B+ configs — the optimizer-state
+memory trick that lets grok-1-314b train on 16 GB/chip meshes.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+class QTensor(NamedTuple):
+    q: jax.Array       # int8 payload
+    scale: jax.Array   # () float32 per-tensor scale
+
+
+def _quantize(x) -> QTensor:
+    amax = jnp.maximum(jnp.max(jnp.abs(x)), 1e-12)
+    scale = amax / 127.0
+    return QTensor(jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8),
+                   scale)
+
+
+def _dequantize(t: QTensor):
+    return t.q.astype(jnp.float32) * t.scale
+
+
+def init(params, *, use_8bit: bool = False) -> Dict:
+    def zero_like(p):
+        z = jnp.zeros(p.shape, jnp.float32)
+        return _quantize(z) if use_8bit else z
+
+    return {
+        "m": jax.tree_util.tree_map(zero_like, params),
+        "v": jax.tree_util.tree_map(zero_like, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def cosine_schedule(step, *, base_lr: float, warmup: int, total: int,
+                    min_frac: float = 0.1):
+    step_f = step.astype(jnp.float32)
+    warm = jnp.minimum(step_f / max(warmup, 1), 1.0)
+    prog = jnp.clip((step_f - warmup) / max(total - warmup, 1), 0.0, 1.0)
+    cos = min_frac + (1 - min_frac) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return base_lr * warm * cos
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in leaves))
+
+
+def update(params, grads, state: Dict, *, lr, b1: float = 0.9,
+           b2: float = 0.95, eps: float = 1e-8, weight_decay: float = 0.1,
+           clip_norm: Optional[float] = 1.0, use_8bit: bool = False):
+    """One AdamW step; returns (new_params, new_state, metrics)."""
+    gnorm = global_norm(grads)
+    if clip_norm is not None:
+        scale = jnp.minimum(1.0, clip_norm / jnp.maximum(gnorm, 1e-12))
+        grads = jax.tree_util.tree_map(
+            lambda g: (g.astype(jnp.float32) * scale), grads)
+    else:
+        grads = jax.tree_util.tree_map(
+            lambda g: g.astype(jnp.float32), grads)
+
+    step = state["step"] + 1
+    bc1 = 1 - b1 ** step.astype(jnp.float32)
+    bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        m_f = _dequantize(m) if use_8bit else m
+        v_f = _dequantize(v) if use_8bit else v
+        m_new = b1 * m_f + (1 - b1) * g
+        v_new = b2 * v_f + (1 - b2) * jnp.square(g)
+        mhat = m_new / bc1
+        vhat = v_new / bc2
+        delta = mhat / (jnp.sqrt(vhat) + eps)
+        p32 = p.astype(jnp.float32)
+        # decoupled weight decay on matrices only (ndim >= 2)
+        wd = weight_decay if p.ndim >= 2 else 0.0
+        p_new = p32 - lr * (delta + wd * p32)
+        m_out = _quantize(m_new) if use_8bit else m_new
+        v_out = _quantize(v_new) if use_8bit else v_new
+        return p_new.astype(p.dtype), m_out, v_out
+
+    flat_p, treedef = jax.tree_util.tree_flatten(params)
+    flat_g = jax.tree_util.tree_leaves(grads)
+    is_q = lambda x: isinstance(x, QTensor)  # noqa: E731
+    flat_m = jax.tree_util.tree_leaves(state["m"], is_leaf=is_q)
+    flat_v = jax.tree_util.tree_leaves(state["v"], is_leaf=is_q)
+    out = [upd(p, g, m, v)
+           for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = jax.tree_util.tree_unflatten(treedef, [o[0] for o in out])
+    new_m = jax.tree_util.tree_unflatten(treedef, [o[1] for o in out])
+    new_v = jax.tree_util.tree_unflatten(treedef, [o[2] for o in out])
+    new_state = {"m": new_m, "v": new_v, "step": step}
+    return new_p, new_state, {"grad_norm": gnorm}

@@ -1,0 +1,94 @@
+"""Serving: jitted prefill/decode steps with KV-cache sharding + a simple
+continuous-batching engine (the 'serve a small model with batched requests'
+driver used by examples/serve_lm.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as PS
+
+from repro.models.transformer import Model
+from repro.sharding import rules
+
+
+def make_serve_fns(model: Model, mesh: Optional[Mesh] = None):
+    """Returns (prefill_fn, decode_fn), jitted; sharded when mesh given."""
+    cfg = model.cfg
+
+    def prefill(params, tokens, cache):
+        return model.prefill(params, tokens, cache)
+
+    def decode(params, token, cache, pos):
+        logits, cache = model.decode_step(params, token, cache, pos)
+        return logits, cache
+
+    if mesh is None:
+        return jax.jit(prefill), jax.jit(decode)
+
+    return jax.jit(prefill), jax.jit(decode)
+
+
+def sample(logits, key, *, temperature: float = 0.0, top_k: int = 0):
+    if temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1)
+    logits = logits / temperature
+    if top_k:
+        kth = jnp.sort(logits, axis=-1)[..., -top_k][..., None]
+        logits = jnp.where(logits < kth, -jnp.inf, logits)
+    return jax.random.categorical(key, logits, axis=-1)
+
+
+@dataclasses.dataclass
+class Request:
+    prompt: jnp.ndarray          # (s,) or (s, K)
+    max_new_tokens: int = 32
+    temperature: float = 0.0
+    out_tokens: Optional[List[int]] = None
+
+
+class BatchedEngine:
+    """Static-batch serving engine: prefill a batch of requests, then decode
+    lock-step until every request finishes (max_new_tokens)."""
+
+    def __init__(self, model: Model, params, max_seq: int = 512):
+        self.model = model
+        self.params = params
+        self.max_seq = max_seq
+        self.prefill_fn, self.decode_fn = make_serve_fns(model)
+
+    def run(self, requests: List[Request], key=None) -> List[List[int]]:
+        cfg = self.model.cfg
+        key = key if key is not None else jax.random.PRNGKey(0)
+        b = len(requests)
+        s = max(int(r.prompt.shape[0]) for r in requests)
+        # left-pad prompts to a common length with token 0
+        def pad(p):
+            pad_n = s - p.shape[0]
+            return jnp.pad(p, [(pad_n, 0)] + [(0, 0)] * (p.ndim - 1))
+        tokens = jnp.stack([pad(r.prompt) for r in requests])
+        cache = self.model.init_cache(b, self.max_seq)
+        logits, cache = self.prefill_fn(self.params, tokens, cache)
+
+        max_new = max(r.max_new_tokens for r in requests)
+        outs = [[] for _ in requests]
+        pos = s
+        token = None
+        for step in range(max_new):
+            key, sub = jax.random.split(key)
+            temp = requests[0].temperature
+            nxt = sample(logits, sub, temperature=temp)        # (b,)
+            for i, r in enumerate(requests):
+                if step < r.max_new_tokens:
+                    outs[i].append(int(nxt[i]))
+            tok = nxt[:, None]
+            if cfg.n_codebooks:
+                tok = jnp.broadcast_to(tok[..., None],
+                                       (b, 1, cfg.n_codebooks))
+            logits, cache = self.decode_fn(self.params, tok, cache,
+                                           jnp.int32(pos))
+            pos += 1
+        return outs

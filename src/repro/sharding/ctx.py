@@ -1,0 +1,63 @@
+"""Mesh context: lets model-internal code place sharding constraints without
+threading the mesh through every call signature.
+
+Set by the train/serve/dry-run builders (``set_mesh``); model code calls
+``constraint(x, *axes)`` with logical axis names — axes absent from the
+current mesh are dropped, and with no mesh set the call is the identity, so
+single-device tests and CPU smoke runs are unaffected.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as PS
+
+_MESH: Optional[Mesh] = None
+
+
+def set_mesh(mesh: Optional[Mesh]) -> None:
+    global _MESH
+    _MESH = mesh
+
+
+def get_mesh() -> Optional[Mesh]:
+    return _MESH
+
+
+def _filter(axis):
+    if axis is None:
+        return None
+    if isinstance(axis, (tuple, list)):
+        kept = tuple(a for a in axis if a in _MESH.shape)
+        return kept if kept else None
+    return axis if axis in _MESH.shape else None
+
+
+def dp_axes():
+    if _MESH is None:
+        return None
+    kept = tuple(a for a in ("pod", "data") if a in _MESH.shape)
+    return kept or None
+
+
+def constraint(x, *axes):
+    """with_sharding_constraint against the context mesh (identity if none).
+
+    ``axes`` are per-dimension axis names (str / tuple / None); dims not
+    divisible by their axis size fall back to None.
+    """
+    if _MESH is None:
+        return x
+    spec = []
+    for dim, ax in zip(x.shape, axes):
+        ax = _filter(ax)
+        if ax is not None:
+            import numpy as np
+            size = int(np.prod([_MESH.shape[a] for a in
+                                (ax if isinstance(ax, tuple) else (ax,))]))
+            if dim % size != 0:
+                ax = None
+        spec.append(ax)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(_MESH, PS(*spec)))

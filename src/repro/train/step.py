@@ -1,0 +1,132 @@
+"""Distributed train step: remat (per-block, in the model), microbatch
+gradient accumulation (compute/comm overlap: one all-reduce per window),
+optional bf16 gradient compression, AdamW, sharding constraints (DP/FSDP/TP/
+SP per sharding/rules.py).
+
+``make_train_step`` returns a jitted function with explicit in/out shardings
+so the same step lowers for 1 device (tests), 256 (single pod), or 512
+(multi-pod) — the dry-run lowers exactly this function.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as PS
+
+from repro.models.transformer import Model
+from repro.optim import adamw
+from repro.sharding import rules
+
+
+def make_train_state(model: Model, key, *, use_8bit: bool = False) -> Dict:
+    params = model.init_params(key)
+    opt = adamw.init(params, use_8bit=use_8bit)
+    return {"params": params, "opt": opt, "step": jnp.zeros((), jnp.int32)}
+
+
+def state_specs(state: Dict, mesh: Mesh, cfg):
+    pspec = rules.params_specs(state["params"], mesh, cfg)
+
+    # m/v have the same tree structure as params (possibly QTensor leaves)
+    def mirror(spec, leaf):
+        if isinstance(leaf, adamw.QTensor):
+            return adamw.QTensor(spec, PS())
+        return spec
+
+    m_spec = jax.tree_util.tree_map(
+        mirror, pspec,
+        state["opt"]["m"],
+        is_leaf=_is_ps)
+    v_spec = jax.tree_util.tree_map(
+        mirror, pspec,
+        state["opt"]["v"],
+        is_leaf=_is_ps)
+    return {
+        "params": pspec,
+        "opt": {"m": m_spec, "v": v_spec, "step": PS()},
+        "step": PS(),
+    }
+
+
+def _is_ps(x):
+    return isinstance(x, PS)
+
+
+def make_train_step(model: Model, mesh: Mesh, *, microbatches: int = 1,
+                    base_lr: float = 3e-4, warmup: int = 100,
+                    total_steps: int = 10000, grad_bf16: bool = True,
+                    donate: bool = True):
+    """Build the jitted, sharded train step."""
+    from repro.sharding import ctx
+    ctx.set_mesh(mesh)
+    cfg = model.cfg
+    batch_spec = {
+        "tokens": rules.batch_specs(mesh),
+        "labels": rules.batch_specs(mesh),
+    }
+
+    def loss_fn(params, batch):
+        # SP constraint on the embedding output is applied inside the model
+        # boundary via activation sharding of inputs; XLA propagates.
+        return model.loss(params, batch)
+
+    def step_fn(state, batch):
+        params = state["params"]
+
+        if microbatches > 1:
+            def micro(carry, mb):
+                gacc = carry
+                loss, g = jax.value_and_grad(loss_fn)(params, mb)
+                if grad_bf16:
+                    # accumulate in bf16: halves the all-reduce bytes (the
+                    # DCN-crossing collective for the 'pod' axis)
+                    g = jax.tree_util.tree_map(
+                        lambda x: x.astype(jnp.bfloat16), g)
+                gacc = jax.tree_util.tree_map(jnp.add, gacc, g)
+                return gacc, loss
+
+            mb_batch = jax.tree_util.tree_map(
+                lambda x: x.reshape((microbatches,
+                                     x.shape[0] // microbatches)
+                                    + x.shape[1:]), batch)
+            zeros = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape,
+                                    jnp.bfloat16 if grad_bf16
+                                    else jnp.float32), params)
+            gsum, losses = jax.lax.scan(micro, zeros, mb_batch)
+            grads = jax.tree_util.tree_map(
+                lambda g: g.astype(jnp.float32) / microbatches, gsum)
+            loss = jnp.mean(losses)
+        else:
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+
+        lr = adamw.cosine_schedule(state["step"], base_lr=base_lr,
+                                   warmup=warmup, total=total_steps)
+        new_params, new_opt, metrics = adamw.update(
+            params, grads, state["opt"], lr=lr, use_8bit=cfg.opt_8bit)
+        # in-graph NaN/inf guard: a poisoned step applies NO update (works
+        # with donated buffers — the old state is still readable in-graph)
+        good = jnp.isfinite(loss) & jnp.isfinite(metrics["grad_norm"])
+        new_state = {"params": new_params, "opt": new_opt,
+                     "step": state["step"] + 1}
+        new_state = jax.tree_util.tree_map(
+            lambda n, o: jnp.where(good, n, o), new_state, state)
+        metrics = dict(metrics, loss=loss, lr=lr,
+                       applied=good.astype(jnp.int32))
+        return new_state, metrics
+
+    dummy_state_spec = None  # resolved at lower time by caller
+
+    def jit_with(state_spec):
+        return jax.jit(
+            step_fn,
+            in_shardings=(rules.named(mesh, state_spec),
+                          rules.named(mesh, batch_spec)),
+            out_shardings=(rules.named(mesh, state_spec), None),
+            donate_argnums=(0,) if donate else (),
+        )
+
+    return step_fn, jit_with, batch_spec

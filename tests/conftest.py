@@ -1,0 +1,10 @@
+"""Shared fixtures.  NOTE: no XLA_FLAGS here on purpose — tests see the real
+single CPU device; multi-device tests spawn subprocesses that set
+--xla_force_host_platform_device_count before importing jax."""
+import numpy as np
+import pytest
+
+
+@pytest.fixture
+def rng():
+    return np.random.RandomState(0)

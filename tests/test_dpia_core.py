@@ -1,0 +1,102 @@
+"""DPIA core: types, typing rules, SCIR race-freedom (paper sections 3, 5)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.dpia import check, interp, phrases as P, stage1, stage2
+from repro.core.dpia.phrases import DpiaTypeError
+from repro.core.dpia.check import RaceError
+from repro.core.dpia.types import (Arr, ExpT, Idx, Num, Pair, Vec, arr,
+                                   is_passive, AccT, CommT, FnT)
+
+
+class TestTypes:
+    def test_shapes(self):
+        assert arr(4, 8) == Arr(4, Arr(8, Num()))
+
+    def test_passivity(self):
+        # Fig. 2: exp passive; acc/comm active; fn passive iff return passive
+        assert is_passive(ExpT(Num()))
+        assert not is_passive(AccT(Num()))
+        assert not is_passive(CommT())
+        assert is_passive(FnT(AccT(Num()), ExpT(Num())))
+        assert not is_passive(FnT(ExpT(Num()), CommT()))
+        assert is_passive(FnT(ExpT(Num()), CommT(), passive=True))
+
+    def test_split_join_types(self):
+        xs = P.var_exp("xs", Arr(12, Num()))
+        assert P.exp_data(P.Split(4, xs)) == Arr(3, Arr(4, Num()))
+        assert P.exp_data(P.Join(P.Split(4, xs))) == Arr(12, Num())
+
+    def test_zip_type(self):
+        xs = P.var_exp("xs", Arr(8, Num()))
+        ys = P.var_exp("ys", Arr(8, Num()))
+        assert P.exp_data(P.Zip(xs, ys)) == Arr(8, Pair(Num(), Num()))
+
+    def test_zip_length_mismatch(self):
+        xs = P.var_exp("xs", Arr(8, Num()))
+        ys = P.var_exp("ys", Arr(4, Num()))
+        with pytest.raises(DpiaTypeError):
+            P.type_of(P.Zip(xs, ys))
+
+    def test_split_divisibility(self):
+        xs = P.var_exp("xs", Arr(10, Num()))
+        with pytest.raises(DpiaTypeError):
+            P.type_of(P.Split(4, xs))
+
+    def test_asvector(self):
+        xs = P.var_exp("xs", Arr(16, Num()))
+        assert P.exp_data(P.AsVector(4, xs)) == Arr(4, Vec(4, "float32"))
+        assert P.exp_data(P.AsScalar(P.AsVector(4, xs))) == Arr(16, Num())
+
+    def test_map_type(self):
+        xs = P.var_exp("xs", Arr(8, Num()))
+        m = P.Map(lambda x: P.add(x, P.lit(1.0)), xs)
+        assert P.exp_data(m) == Arr(8, Num())
+
+    def test_assign_shape_mismatch(self):
+        a = P.var_acc("a", Arr(4, Num()))
+        e = P.var_exp("e", Arr(8, Num()))
+        with pytest.raises(DpiaTypeError):
+            P.type_of(P.Assign(a, e))
+
+
+class TestRaceFreedom:
+    def test_paper_racy_parfor_rejected(self):
+        """The paper's section 3.3 non-typable example: every iteration writes
+        the same acceptor b — a data race, rejected by passivity."""
+        b = P.var_acc("b", Num())
+        es = P.var_exp("es", Arr(8, Num()))
+        out = P.var_acc("out", Arr(8, Num()))
+        racy = P.ParFor(8, Num(), out,
+                        lambda i, o: P.Assign(b, P.IdxE(es, i)))
+        with pytest.raises(RaceError):
+            check.check_race_free(racy)
+
+    def test_race_free_parfor_accepted(self):
+        es = P.var_exp("es", Arr(8, Num()))
+        out = P.var_acc("out", Arr(8, Num()))
+        ok = P.ParFor(8, Num(), out,
+                      lambda i, o: P.Assign(o, P.IdxE(es, i)))
+        check.check_race_free(ok)
+
+    def test_sequential_for_may_share(self):
+        """(;) and for bodies may interfere (contexts shared via Pair rule)."""
+        v_acc = P.var_acc("v", Num())
+        v_exp = P.var_exp("v", Num())
+        c = P.For(4, lambda i: P.Assign(v_acc, P.add(v_exp, P.lit(1.0))))
+        check.check_race_free(c)  # no exception
+
+    def test_nested_parfor_inner_acceptor_only(self):
+        es = P.var_exp("es", Arr(4, Arr(4, Num())))
+        out = P.var_acc("out", Arr(4, Arr(4, Num())))
+        ok = P.ParFor(4, Arr(4, Num()), out, lambda i, o: P.ParFor(
+            4, Num(), o, lambda j, o2: P.Assign(
+                o2, P.IdxE(P.IdxE(es, i), j))))
+        check.check_race_free(ok)
+
+    def test_full_translation_is_race_free(self):
+        xs = P.var_exp("xs", Arr(16, Num()))
+        e = P.Map(lambda x: P.mul(x, x), xs)
+        cmd = stage2.expand(stage1.translate(e, P.var_acc("o", Arr(16, Num()))))
+        check.check(cmd)

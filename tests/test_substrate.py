@@ -1,0 +1,165 @@
+"""Substrate: data determinism, checkpoint roundtrip/retention/async,
+optimizer (incl. 8-bit moments), fault-tolerance pieces."""
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.ckpt.manager import CheckpointManager
+from repro.data.pipeline import DataConfig, DataState, SyntheticLM
+from repro.ft import compress
+from repro.ft.resilience import Watchdog, elastic_remesh, guard_update
+from repro.optim import adamw
+
+
+class TestData:
+    def test_determinism_across_restart(self):
+        cfg = DataConfig(vocab=100, seq_len=16, global_batch=8, seed=3)
+        d = SyntheticLM(cfg)
+        a = d.global_batch_at(7)
+        b = d.global_batch_at(7)
+        np.testing.assert_array_equal(a["tokens"], b["tokens"])
+
+    def test_shards_partition_batch(self):
+        cfg = DataConfig(vocab=100, seq_len=16, global_batch=8)
+        d = SyntheticLM(cfg)
+        full = d.global_batch_at(0)["tokens"]
+        parts = [d.shard_at(0, i, 4)["tokens"] for i in range(4)]
+        np.testing.assert_array_equal(np.concatenate(parts), full)
+
+    def test_labels_are_shifted_tokens(self):
+        cfg = DataConfig(vocab=100, seq_len=16, global_batch=2)
+        b = SyntheticLM(cfg).global_batch_at(0)
+        assert b["tokens"].shape == (2, 16)
+        assert b["labels"].shape == (2, 16)
+
+    def test_iterator_state_resumes(self):
+        cfg = DataConfig(vocab=100, seq_len=8, global_batch=2)
+        d = SyntheticLM(cfg)
+        it = d.iterator()
+        b0, st = next(it)
+        b1, st = next(it)
+        it2 = d.iterator(DataState(step=1))
+        b1b, _ = next(it2)
+        np.testing.assert_array_equal(b1["tokens"], b1b["tokens"])
+
+
+class TestCheckpoint:
+    def _state(self, v=0.0):
+        return {"w": jnp.full((4, 4), v), "step": jnp.int32(v),
+                "nested": {"b": jnp.arange(3.0)}}
+
+    def test_roundtrip(self, tmp_path):
+        m = CheckpointManager(str(tmp_path), async_save=False)
+        st = self._state(2.0)
+        m.save(10, st, extra={"data_state": {"step": 10}})
+        step, rest, extra = m.restore_latest(self._state())
+        assert step == 10 and extra["data_state"]["step"] == 10
+        np.testing.assert_array_equal(rest["w"], st["w"])
+
+    def test_retention(self, tmp_path):
+        m = CheckpointManager(str(tmp_path), keep=2, async_save=False)
+        for s in (1, 2, 3, 4):
+            m.save(s, self._state(s))
+        assert m.all_steps() == [3, 4]
+
+    def test_async_save(self, tmp_path):
+        m = CheckpointManager(str(tmp_path), async_save=True)
+        m.save(5, self._state(5.0))
+        m.wait()
+        assert m.latest_step() == 5
+
+    def test_atomicity_no_partial_dirs(self, tmp_path):
+        m = CheckpointManager(str(tmp_path), async_save=False)
+        m.save(1, self._state())
+        names = os.listdir(tmp_path)
+        assert all(not n.startswith(".tmp") for n in names)
+
+    def test_shape_mismatch_rejected(self, tmp_path):
+        m = CheckpointManager(str(tmp_path), async_save=False)
+        m.save(1, self._state())
+        bad_template = {"w": jnp.zeros((2, 2)), "step": jnp.int32(0),
+                        "nested": {"b": jnp.zeros(3)}}
+        with pytest.raises(ValueError):
+            m.restore(1, bad_template)
+
+
+class TestOptimizer:
+    def _converges(self, use_8bit):
+        w = {"x": jnp.array([5.0, -3.0])}
+        st = adamw.init(w, use_8bit=use_8bit)
+        for _ in range(200):
+            g = jax.tree_util.tree_map(lambda p: 2 * p, w)  # grad of x^2
+            w, st, _ = adamw.update(w, g, st, lr=0.05, weight_decay=0.0,
+                                    use_8bit=use_8bit)
+        return float(jnp.abs(w["x"]).max())
+
+    def test_adamw_converges(self):
+        assert self._converges(False) < 0.15
+
+    def test_adamw_8bit_converges(self):
+        assert self._converges(True) < 0.3
+
+    def test_grad_clipping(self):
+        w = {"x": jnp.ones(4)}
+        st = adamw.init(w)
+        g = {"x": jnp.full(4, 1e6)}
+        _, _, m = adamw.update(w, g, st, lr=0.1)
+        assert float(m["grad_norm"]) > 1e5  # reported pre-clip
+
+    def test_cosine_schedule(self):
+        lr0 = adamw.cosine_schedule(jnp.int32(0), base_lr=1.0, warmup=10,
+                                    total=100)
+        lr_w = adamw.cosine_schedule(jnp.int32(10), base_lr=1.0, warmup=10,
+                                     total=100)
+        lr_end = adamw.cosine_schedule(jnp.int32(100), base_lr=1.0, warmup=10,
+                                       total=100)
+        assert float(lr0) == 0.0
+        assert abs(float(lr_w) - 1.0) < 1e-5
+        assert float(lr_end) < 0.11
+
+
+class TestFaultTolerance:
+    def test_guard_update(self):
+        assert guard_update({"loss": 1.0, "grad_norm": 2.0})
+        assert not guard_update({"loss": float("nan"), "grad_norm": 1.0})
+        assert not guard_update({"loss": 1.0, "grad_norm": float("inf")})
+
+    def test_watchdog_fires(self):
+        events = []
+        w = Watchdog(deadline_s=0.05,
+                     on_straggler=lambda s, dt: events.append(s))
+        w.arm(step=7)
+        time.sleep(0.15)
+        w.disarm()
+        assert events == [7]
+
+    def test_watchdog_disarm_in_time(self):
+        events = []
+        w = Watchdog(deadline_s=0.5,
+                     on_straggler=lambda s, dt: events.append(s))
+        w.arm(step=1)
+        w.disarm()
+        time.sleep(0.1)
+        assert events == []
+
+    def test_elastic_remesh_shrinks_data_axis(self):
+        mesh = elastic_remesh((4, 1), ("data", "model"))
+        assert mesh.shape["data"] == 1  # only 1 CPU device available
+
+    def test_int8_error_feedback_quantisation(self):
+        """EF residual keeps the quantised stream unbiased over steps."""
+        rng = np.random.RandomState(0)
+        g = jnp.asarray(rng.randn(256), "float32") * 1e-3
+        err = jnp.zeros_like(g)
+        acc = jnp.zeros_like(g)
+        for _ in range(50):
+            q, scale = compress._q8(g + err)
+            deq = q.astype(jnp.float32) * scale
+            err = (g + err) - deq
+            acc = acc + deq
+        np.testing.assert_allclose(np.asarray(acc / 50), np.asarray(g),
+                                   atol=5e-5)
