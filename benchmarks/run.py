@@ -44,6 +44,45 @@ def bench_strategy_spread(csv_rows: List[str]) -> None:
         csv_rows.append(f"strategy/gemv/{label},{t:.1f},")
 
 
+def bench_autotune(csv_rows: List[str]) -> None:
+    """Tuned-vs-default strategy choice (repro.autotune, jnp backend)."""
+    import tempfile
+
+    from repro import autotune
+    from repro.autotune import space
+    from repro.autotune.measure import compile_candidate, time_callable
+    print("# autotune: cost-model-guided strategy vs the hard-coded default")
+    cache = tempfile.mktemp(suffix=".json")  # fresh search for the benchmark
+    for kernel, shape in [("dot", dict(n=8192)),
+                          ("matmul", dict(m=512, k=512, n=512)),
+                          ("rmsnorm", dict(rows=512, d=1024))]:
+        res = autotune.tune(kernel, cache=cache, measure=True, top_k=3,
+                            iters=5, **shape)
+        shp = "x".join(str(v) for _, v in sorted(shape.items()))
+        if res.measured_us is None:
+            # every measured candidate failed to compile/run here
+            print(f"  {kernel}/{shp:12s} analytic-only pick {res.params} "
+                  f"(no candidate measurable on this backend)")
+            continue
+        default = space.candidate_from_params(
+            kernel, space.default_params(kernel, **shape), **shape)
+        t_def = res.timings.get(default.params_key())
+        if t_def is None:
+            try:
+                fn, args = compile_candidate(default)
+                t_def = time_callable(fn, args, iters=5)
+            except Exception:
+                t_def = float("nan")
+        print(f"  {kernel}/{shp:12s} default {t_def:9.1f} us   "
+              f"tuned {res.measured_us:9.1f} us   {res.params}")
+        csv_rows.append(f"autotune/{kernel}/{shp}/default,{t_def:.1f},")
+        # ';' inside the derived column: its values must stay comma-free
+        params_s = space.params_key(res.params).replace(",", ";")
+        csv_rows.append(
+            f"autotune/{kernel}/{shp}/tuned,{res.measured_us:.1f},"
+            f"params={params_s}")
+
+
 def bench_kernels(csv_rows: List[str]) -> None:
     from repro.kernels import ref
     from repro.kernels.rmsnorm import rmsnorm
@@ -98,6 +137,8 @@ def main() -> None:
     fig7_overhead.run(csv_rows)
     print()
     bench_strategy_spread(csv_rows)
+    print()
+    bench_autotune(csv_rows)
     print()
     bench_kernels(csv_rows)
     print()

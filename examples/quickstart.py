@@ -4,6 +4,8 @@
 2. Derive a TPU strategy by semantics-preserving rewrites (paper eq. (2)).
 3. Compile through the formal translation (Stage I -> II -> III).
 4. Run all three backends and check them against the mathematical reading.
+5. Let the autotuner pick the strategy instead (repro.autotune): searched
+   once, then served from the persistent tuning cache.
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
@@ -54,3 +56,15 @@ for backend in ("jnp", "pallas"):
     np.testing.assert_allclose(got, oracle, rtol=1e-4)
     print(f"backend {backend:8s}: {float(got):+.6f}  == oracle OK")
 print(f"oracle (vmap reading):  {float(oracle):+.6f}")
+
+# -- 5. or let the autotuner derive the strategy ------------------------------
+from repro import autotune
+
+res = autotune.tune(dot_spec, arg_vars=[xs, ys], backend="jnp",
+                    top_k=3, iters=3)
+print(f"\n== autotuned strategy ==\n{res.params}  "
+      f"({res.source}, {res.n_candidates} candidates"
+      + (f", {res.measured_us:.0f} us" if res.measured_us else "") + ")")
+res2 = autotune.tune(dot_spec, arg_vars=[xs, ys], backend="jnp")
+print(f"second tune call: served from {res2.source} "
+      f"({autotune.default_cache().path})")

@@ -1,0 +1,245 @@
+"""Tuner entry points: ``tune``, ``get_tuned``, ``@autotuned``, warm-up.
+
+    from repro import autotune
+
+    res = autotune.tune("dot", n=4096)            # search + measure + cache
+    res = autotune.tune("dot", n=4096)            # second call: cache hit
+    res.params                                     # {"block": 4096, "leaf": ...}
+
+    res = autotune.tune(expr, arg_vars=[xs, ys])   # arbitrary DPIA expression
+
+    @autotune.autotuned("matmul")
+    def mm(a, b): ...                              # body is documentation;
+    mm(A, B)                                       # calls the tuned pipeline
+
+Search flow: enumerate the strategy space (space.py), rank every candidate
+with the analytic cost model (cost.py), then — when ``measure=True`` —
+compile and time the analytic top-k plus the un-tuned default (measure.py)
+and keep the fastest.  The winner is written to the persistent cache
+(cache.py) keyed by (kernel, shape, dtype, backend, mesh), so the same
+``tune`` call is afterwards served from cache without re-search.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Union
+
+from repro.core.dpia import phrases as P
+
+from . import measure as measure_mod
+from . import space as space_mod
+from .cache import TuningCache, default_cache, make_key
+
+Spec = Union[str, P.Phrase]
+
+
+@dataclass
+class TuneResult:
+    kernel: str
+    key: str
+    params: Dict[str, object]
+    source: str                      # "cache" | "analytic" | "measured"
+    cost_s: Optional[float] = None   # analytic prediction for the winner
+    measured_us: Optional[float] = None
+    timings: Dict[str, float] = field(default_factory=dict)
+    n_candidates: int = 0
+
+    def params_key(self) -> str:
+        return space_mod.params_key(self.params)
+
+
+def _resolve_cache(cache) -> TuningCache:
+    if cache is None:
+        return default_cache()
+    if isinstance(cache, TuningCache):
+        return cache
+    return TuningCache(str(cache))
+
+
+def tune(spec: Spec, *, backend: str = "jnp", dtype: str = "float32",
+         mesh: str = "single", cache=None, measure: bool = True,
+         top_k: int = 4, iters: int = 5, force: bool = False,
+         verify: bool = False, arg_vars: Optional[List[P.Var]] = None,
+         **shape) -> TuneResult:
+    """Pick the best strategy for ``spec`` at a concrete shape.
+
+    ``spec`` is either a kernel name ("dot", "asum", "scal", "matmul",
+    "rmsnorm", "softmax") with its shape kwargs, or a DPIA functional
+    expression (then ``arg_vars`` must list its argument Vars and the
+    space comes from applying the rewrite rules to the expression itself).
+
+    ``measure=False`` ranks analytically only (no compilation — cheap
+    enough for inline use on a serving path).  ``verify=True`` additionally
+    checks every measured candidate's output against the default strategy.
+    """
+    c = _resolve_cache(cache)
+
+    if isinstance(spec, str):
+        kernel = spec
+    elif isinstance(spec, P.Phrase):
+        if arg_vars is None:
+            raise ValueError("tune(expr, ...): arg_vars is required for "
+                             "expression specs")
+        kernel = f"expr:{space_mod.expr_signature(spec)}"
+    else:
+        raise TypeError(f"tune: spec must be a kernel name or a DPIA "
+                        f"expression, got {type(spec).__name__}")
+
+    # cache check happens BEFORE any space enumeration: a hit really is free
+    key = make_key(kernel, shape, dtype, backend, mesh)
+    cached = c.get(key)
+    if cached is not None and not force:
+        # an analytic-only record is upgraded when measurement is requested
+        if not measure or cached.get("source") == "measured":
+            return TuneResult(
+                kernel=kernel, key=key, params=dict(cached["params"]),
+                source="cache", cost_s=cached.get("cost_s"),
+                measured_us=cached.get("measured_us"),
+                timings=dict(cached.get("timings", {})),
+                n_candidates=int(cached.get("n_candidates", 0)))
+
+    if isinstance(spec, str):
+        cands = space_mod.enumerate_space(kernel, **shape)
+        try:
+            default = space_mod.candidate_from_params(
+                kernel, space_mod.default_params(kernel, **shape), **shape)
+        except ValueError:
+            default = None
+    else:
+        cands = space_mod.rewrite_candidates(spec, arg_vars)
+        default = cands[0]  # the identity rewrite
+
+    if not cands:
+        raise ValueError(
+            f"tune: empty strategy space for {kernel!r} at shape {shape!r} "
+            f"(no block size divides the extents?)")
+
+    ranked = measure_mod.rank_by_cost(cands)
+    chosen, chosen_cost = ranked[0]
+    timings: Dict[str, float] = {}
+    measured_us = None
+    source = "analytic"
+
+    if measure:
+        pick = [cand for cand, _ in ranked[:max(1, top_k)]]
+        if default is not None and all(p.params != default.params
+                                       for p in pick):
+            pick.append(default)
+        timings = measure_mod.measure_candidates(
+            pick, backend=backend, iters=iters,
+            verify_against=default if verify else None)
+        if timings:
+            by_key = {cand.params_key(): cand for cand in pick}
+            best_key = min(timings, key=lambda k2: (timings[k2], k2))
+            chosen = by_key[best_key]
+            chosen_cost = next((s for cand, s in ranked
+                                if cand.params == chosen.params), chosen_cost)
+            measured_us = timings[best_key]
+            source = "measured"
+
+    record = {
+        "kernel": kernel, "params": chosen.params_dict, "source": source,
+        "cost_s": chosen_cost if chosen_cost != float("inf") else None,
+        "measured_us": measured_us, "timings": timings,
+        "shape": dict(shape), "backend": backend, "dtype": dtype,
+        "mesh": mesh, "n_candidates": len(cands),
+    }
+    c.put(key, record)
+    return TuneResult(kernel=kernel, key=key, params=chosen.params_dict,
+                      source=source, cost_s=record["cost_s"],
+                      measured_us=measured_us, timings=timings,
+                      n_candidates=len(cands))
+
+
+def get_tuned(kernel: str, *, backend: str = "jnp", dtype: str = "float32",
+              mesh: str = "single", cache=None, **shape) -> Dict[str, object]:
+    """Tuned params for a kernel/shape — cache hit or cheap analytic search.
+
+    This is the serving-path entry: it never compiles or measures, so a
+    cold call costs one pass of the analytic model and a hot call is a
+    dict lookup."""
+    res = tune(kernel, backend=backend, dtype=dtype, mesh=mesh, cache=cache,
+               measure=False, **shape)
+    return res.params
+
+
+# ---------------------------------------------------------------------------
+# decorator + warm-up
+# ---------------------------------------------------------------------------
+
+_SHAPE_FROM_ARGS = {
+    "dot": lambda a: {"n": int(a[0].shape[0])},
+    "asum": lambda a: {"n": int(a[0].shape[0])},
+    "scal": lambda a: {"n": int(a[1].shape[0])},
+    "matmul": lambda a: {"m": int(a[0].shape[0]), "k": int(a[0].shape[1]),
+                         "n": int(a[1].shape[1])},
+    "rmsnorm": lambda a: {"rows": int(a[0].shape[0]), "d": int(a[0].shape[1])},
+    "softmax": lambda a: {"rows": int(a[0].shape[0]), "d": int(a[0].shape[1])},
+}
+
+
+def autotuned(kernel: str, *, backend: str = "jnp", cache=None,
+              measure: bool = False, **tune_kw):
+    """Decorator: calls to the wrapped function run the tuned strategy for
+    the call's shapes, compiled through the formal pipeline and memoised
+    per shape.  The wrapped body itself is never executed — it documents
+    the mathematical spec (use repro.kernels.ref for oracles)."""
+    shape_fn = _SHAPE_FROM_ARGS.get(kernel)
+    if shape_fn is None:
+        raise ValueError(f"autotuned: unknown kernel {kernel!r}; known: "
+                         f"{sorted(_SHAPE_FROM_ARGS)}")
+
+    def deco(fn):
+        compiled: Dict[tuple, object] = {}
+
+        @functools.wraps(fn)
+        def wrapper(*arrays):
+            import jax
+
+            from repro.kernels import dpia_blas
+            shape = shape_fn(arrays)
+            memo_key = (tuple(sorted(shape.items())), backend)
+            if memo_key not in compiled:
+                res = tune(kernel, backend=backend, cache=cache,
+                           measure=measure, **shape, **tune_kw)
+                cand = space_mod.candidate_from_params(
+                    kernel, res.params, **shape)
+                expr, argv = cand.build()
+                compiled[memo_key] = jax.jit(
+                    dpia_blas.compile_op(expr, argv, backend=backend))
+            return compiled[memo_key](*arrays)
+
+        wrapper.compiled = compiled
+        return wrapper
+    return deco
+
+
+def warm_for_model(cfg, *, max_seq: int = 512, backend: str = "jnp",
+                   cache=None, batch_sizes=(1, 8)
+                   ) -> Dict[str, Dict[str, object]]:
+    """Pre-tune (analytically, cache-backed) the strategy choices a serving
+    engine will need for a model config, at the shapes the ops layer
+    actually keys on: rmsnorm flattens to rows = batch * seq, prefill
+    matmuls run at m = batch * seq, decode matmuls at m = batch.  Returns
+    {cache key: tuned params}; shapes with no valid space are skipped."""
+    wants = []
+    for b in batch_sizes:
+        rows = b * max_seq
+        wants += [
+            ("rmsnorm", {"rows": rows, "d": cfg.d_model}),
+            ("rmsnorm", {"rows": b, "d": cfg.d_model}),        # decode step
+            ("matmul", {"m": rows, "k": cfg.d_model, "n": cfg.d_ff}),
+            ("matmul", {"m": rows, "k": cfg.d_model, "n": cfg.d_model}),
+            ("matmul", {"m": b, "k": cfg.d_model, "n": cfg.d_ff}),
+            ("matmul", {"m": b, "k": cfg.d_model, "n": cfg.d_model}),
+        ]
+    out: Dict[str, Dict[str, object]] = {}
+    for kernel, shape in wants:
+        try:
+            res = tune(kernel, backend=backend, cache=cache, measure=False,
+                       **shape)
+        except (ValueError, AssertionError):
+            continue
+        out[res.key] = res.params
+    return out

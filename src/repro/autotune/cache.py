@@ -1,0 +1,135 @@
+"""Persistent tuning cache.
+
+On-disk format (JSON, human-editable):
+
+    {
+      "version": 1,
+      "entries": {
+        "dot|n=4096|float32|jnp|single": {
+          "kernel": "dot",
+          "params": {"block": 4096, "leaf": "vpu"},
+          "source": "measured",            # or "analytic"
+          "cost_s": 4.1e-06,               # analytic prediction, seconds
+          "measured_us": 12.3,             # chosen candidate, if measured
+          "timings": {"block=4096,leaf=vpu": 12.3, ...},
+          "shape": {"n": 4096}
+        }, ...
+      }
+    }
+
+Keys are ``kernel|shape|dtype|backend|mesh``; every component the compiled
+artefact depends on is in the key, so serving never has to re-search — a hit
+is always safe to reuse.  Writes are atomic (tmp + rename) and corrupted or
+version-skewed files are treated as empty rather than fatal.
+"""
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+import threading
+from typing import Dict, Optional
+
+VERSION = 1
+
+_ENV_PATH = "REPRO_AUTOTUNE_CACHE"
+
+
+def default_path() -> str:
+    env = os.environ.get(_ENV_PATH)
+    if env:
+        return env
+    return os.path.join(os.path.expanduser("~"), ".cache", "repro",
+                        "autotune.json")
+
+
+def make_key(kernel: str, shape: Dict[str, object], dtype: str = "float32",
+             backend: str = "jnp", mesh: str = "single") -> str:
+    shape_s = ",".join(f"{k}={shape[k]}" for k in sorted(shape))
+    return f"{kernel}|{shape_s}|{dtype}|{backend}|{mesh}"
+
+
+class TuningCache:
+    """JSON-backed tuning cache with in-process memoisation."""
+
+    def __init__(self, path: Optional[str] = None):
+        self.path = path or default_path()
+        self._lock = threading.Lock()
+        self._mem: Dict[str, dict] = {}
+        self._loaded = False
+
+    # -- disk ---------------------------------------------------------------
+    def _load(self) -> None:
+        if self._loaded:
+            return
+        self._loaded = True
+        try:
+            with open(self.path) as f:
+                doc = json.load(f)
+            if isinstance(doc, dict) and doc.get("version") == VERSION:
+                entries = doc.get("entries", {})
+                if isinstance(entries, dict):
+                    # disk never overrides fresher in-process results
+                    for k, v in entries.items():
+                        self._mem.setdefault(k, v)
+        except (OSError, ValueError):
+            pass  # missing or corrupt cache: start empty
+
+    def _save(self) -> None:
+        doc = {"version": VERSION, "entries": self._mem}
+        d = os.path.dirname(self.path) or "."
+        os.makedirs(d, exist_ok=True)
+        fd, tmp = tempfile.mkstemp(dir=d, prefix=".autotune-", suffix=".json")
+        try:
+            with os.fdopen(fd, "w") as f:
+                json.dump(doc, f, indent=1, sort_keys=True)
+            os.replace(tmp, self.path)
+        except OSError:
+            try:
+                os.unlink(tmp)
+            except OSError:
+                pass
+
+    # -- API ----------------------------------------------------------------
+    def get(self, key: str) -> Optional[dict]:
+        with self._lock:
+            self._load()
+            return self._mem.get(key)
+
+    def put(self, key: str, record: dict) -> None:
+        with self._lock:
+            self._load()
+            self._mem[key] = record
+            self._save()
+
+    def __contains__(self, key: str) -> bool:
+        return self.get(key) is not None
+
+    def __len__(self) -> int:
+        with self._lock:
+            self._load()
+            return len(self._mem)
+
+    def keys(self):
+        with self._lock:
+            self._load()
+            return sorted(self._mem)
+
+    def clear(self) -> None:
+        with self._lock:
+            self._mem = {}
+            self._loaded = True
+            self._save()
+
+
+_default: Optional[TuningCache] = None
+_default_lock = threading.Lock()
+
+
+def default_cache() -> TuningCache:
+    """Process-wide cache at ``$REPRO_AUTOTUNE_CACHE`` or ~/.cache/repro/."""
+    global _default
+    with _default_lock:
+        if _default is None or _default.path != default_path():
+            _default = TuningCache()
+        return _default

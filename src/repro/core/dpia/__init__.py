@@ -12,6 +12,19 @@ Public surface:
   stage3_pallas   — imperative DPIA -> pl.pallas_call (TPU kernels)
   stage3_shardmap — mesh-level strategies -> shard_map + collectives
   strategies      — semantics-preserving rewrites (Steuwer et al. 2015 style)
+
+Autotuning
+----------
+Strategy *choice* lives outside this package, in ``repro.autotune``: the
+rewrite rules above define the strategy space, ``repro.autotune.space``
+enumerates it per kernel/shape, ``repro.autotune.cost`` ranks candidates
+with an analytical roofline model (FLOPs, HBM/VMEM bytes, grid/loop
+overhead), ``repro.autotune.measure`` optionally compiles and times the
+top-k through stage1 -> stage2 -> stage3, and the winner is remembered in a
+persistent cache keyed by (kernel, shape, dtype, backend, mesh).  Because
+every candidate is rewrite-derived, tuning can change performance but never
+semantics.  ``strategies.enumerate_dot_strategies``/``strategies.search``
+remain as thin compatibility shims.  See docs/autotune.md.
 """
 from . import (check, hoist, interp, phrases, pretty, stage1, stage2,
                stage3_jnp, stage3_pallas, stage3_shardmap, strategies, types)  # noqa: F401

@@ -20,8 +20,6 @@ small, structured strategy space).
 """
 from __future__ import annotations
 
-import itertools
-from dataclasses import replace as dc_replace
 from typing import Callable, Iterable, List, Optional
 
 from . import phrases as P
@@ -91,30 +89,38 @@ def stage_vmem(e: P.Phrase) -> P.Phrase:
 
 
 # ---------------------------------------------------------------------------
-# strategy enumeration / search (the ICFP'15 search, miniaturised)
+# strategy enumeration / search (the ICFP'15 search, miniaturised).
+# The real autotuner lives in repro.autotune (generalised spaces, analytic
+# cost model, measured refinement, persistent cache); these entry points are
+# kept as thin compatibility shims over it.
 # ---------------------------------------------------------------------------
 
 def enumerate_dot_strategies(n: int, blocks: Iterable[int] = (256, 1024, 2048),
                              lanes: Iterable[int] = (128,)) -> List[dict]:
-    """Strategy space for dot-product-like reductions of length n."""
-    out = []
-    for b in blocks:
-        if n % b:
-            continue
-        out.append({"block": b, "vector": None})
-        for w in lanes:
-            if b % w == 0:
-                out.append({"block": b, "vector": w})
-    return out
+    """Strategy space for dot-product-like reductions of length n.
+
+    Compatibility shim: delegates to ``repro.autotune.space`` (which holds
+    the generalised per-kernel spaces) and preserves the seed's output
+    format of ``{"block": b, "vector": w|None}`` dicts."""
+    from repro.autotune import space as _space
+    return _space.dot_param_grid(n, blocks=blocks, lanes=lanes)
 
 
 def search(candidates: List[P.Phrase], cost_fn: Callable[[P.Phrase], float]
            ) -> P.Phrase:
-    """Pick the candidate strategy minimising ``cost_fn`` (compiled cost)."""
-    best, best_c = None, float("inf")
+    """Pick the candidate strategy minimising ``cost_fn`` (compiled cost).
+
+    Deterministic: NaN costs are treated as +inf, and ties (including the
+    all-infinite case) are broken by earliest position in ``candidates``,
+    so a fixed candidate order always yields the same winner."""
+    if not candidates:
+        raise ValueError(
+            "strategies.search: empty candidate list — enumerate a "
+            "non-empty strategy space first (see repro.autotune.space; "
+            "e.g. no block size divides the input extent)")
+    best, best_c = candidates[0], float("inf")
     for c in candidates:
         cost = cost_fn(c)
-        if cost < best_c:
+        if cost == cost and cost < best_c:  # NaN-safe strict improvement
             best, best_c = c, cost
-    assert best is not None
     return best

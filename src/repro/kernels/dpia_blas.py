@@ -133,6 +133,30 @@ def strategy_rmsnorm(rows: int, d: int, eps: float = 1e-6,
     return e, [xs, w]
 
 
+def _softmax_row(row: Expr) -> Expr:
+    """The one softmax spec both builders share: exp(x - max x) / sum."""
+    mx = P.FullReduce("max", row)
+    ex = P.UnOp("exp", P.sub(row, mx))
+    return P.div(ex, P.FullReduce("add", ex))
+
+
+def naive_softmax(rows: int, d: int) -> Tuple[Expr, List[P.Var]]:
+    """Row softmax spec: per row, exp(x - max x) / sum exp(x - max x)."""
+    xs = P.var_exp("xs", Arr(rows, Arr(d, Num())))
+    return P.Map(_softmax_row, xs), [xs]
+
+
+def strategy_softmax(rows: int, d: int, row_block: int = 8
+                     ) -> Tuple[Expr, List[P.Var]]:
+    """Softmax with rmsnorm's strategy shape: grid over row blocks,
+    sequential rows within a block, whole-row VPU max/sum leaves."""
+    xs = P.var_exp("xs", Arr(rows, Arr(d, Num())))
+    e = P.Join(P.Map(
+        lambda blk: P.Map(_softmax_row, blk, level=P.SEQ),
+        P.Split(row_block, xs), level=P.GRID(0)))
+    return e, [xs]
+
+
 def strategy_matmul(m: int, k: int, n: int, bm: int = 128, bk: int = 128
                     ) -> Tuple[Expr, List[P.Var]]:
     """Blocked matmul: grid over row blocks, sequential MXU accumulation over

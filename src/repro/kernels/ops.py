@@ -9,11 +9,16 @@ Every op has interchangeable implementations (selected per call or via
   'dpia-pallas' — DPIA strategy compiled to Pallas kernels
 
 The DPIA paths exist for the paper's benchmark ops; they are cached per shape.
+Strategy parameters (block/tile sizes, reduce leaves) for the DPIA paths are
+chosen by the ``repro.autotune`` cost model per shape/backend and remembered
+in its persistent cache; ``set_autotune(False)`` restores the seed's
+hard-coded defaults.
 """
 from __future__ import annotations
 
 import functools
-from typing import Dict, Tuple
+import os
+from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -25,6 +30,8 @@ from .rmsnorm import rmsnorm as _rms_pallas
 
 _DEFAULT_IMPL = "xla"
 _dpia_cache: Dict[Tuple, object] = {}
+_AUTOTUNE = os.environ.get("REPRO_AUTOTUNE", "1") != "0"
+_AUTOTUNE_CACHE = None  # None -> repro.autotune.default_cache()
 
 
 def set_default_impl(impl: str) -> None:
@@ -33,8 +40,48 @@ def set_default_impl(impl: str) -> None:
     _DEFAULT_IMPL = impl
 
 
+def set_autotune(enabled: bool, cache=None) -> None:
+    """Toggle autotuned strategy selection for the DPIA impl paths.
+
+    Process-wide (like ``set_default_impl``).  ``cache`` optionally points
+    the tuner at a specific TuningCache (or a path); compiled-function and
+    params memos are dropped so the change takes effect."""
+    global _AUTOTUNE, _AUTOTUNE_CACHE
+    _AUTOTUNE = bool(enabled)
+    _AUTOTUNE_CACHE = cache
+    _dpia_cache.clear()
+    _tuned_memo.clear()
+
+
+def autotune_enabled() -> bool:
+    return _AUTOTUNE
+
+
 def _impl(impl):
     return impl or _DEFAULT_IMPL
+
+
+_tuned_memo: Dict[Tuple, Optional[dict]] = {}
+
+
+def _tuned(kernel: str, backend: str, **shape) -> Optional[dict]:
+    """Tuned params for the kernel at this shape, or None (use defaults).
+
+    Steady state is one dict lookup (per-process memo); a cold shape costs
+    one analytic ranking pass via the tuner's persistent cache."""
+    if not _AUTOTUNE:
+        return None
+    memo_key = (kernel, backend, tuple(sorted(shape.items())))
+    if memo_key in _tuned_memo:
+        return _tuned_memo[memo_key]
+    from repro import autotune
+    try:
+        params = autotune.get_tuned(kernel, backend=backend,
+                                    cache=_AUTOTUNE_CACHE, **shape)
+    except Exception:
+        params = None  # never let tuning break the op itself
+    _tuned_memo[memo_key] = params
+    return params
 
 
 def _dpia(key, builder, backend):
@@ -73,8 +120,22 @@ def dot(x, y, impl: str | None = None):
     if impl in ("xla", "pallas"):
         return ref.dot(x, y)
     backend = "jnp" if impl == "dpia-jnp" else "pallas"
-    fn = _dpia(("dot", x.shape), lambda: dpia_blas.strategy_dot(x.shape[0]),
-               backend)
+    n = x.shape[0]
+    fn = None
+    params = _tuned("dot", backend, n=n)
+    if params is not None:
+        def build(params=params, n=n):
+            from repro.autotune import space as _sp
+            return _sp.candidate_from_params("dot", params, n=n).build()
+        try:
+            fn = _dpia(("dot", x.shape, tuple(sorted(params.items()))),
+                       build, backend)
+        except Exception:
+            fn = None  # malformed cache params: fall back to the default
+    if fn is None:
+        blk = 2048 if n % 2048 == 0 else n  # whole-array block always divides
+        fn = _dpia(("dot", x.shape, blk),
+                   lambda: dpia_blas.strategy_dot(n, blk), backend)
     return fn(x, y)
 
 
@@ -98,9 +159,14 @@ def matmul(a, b, impl: str | None = None, out_dtype=None):
         backend = "pallas" if impl == "dpia-pallas" else "jnp"
         m, k = a.shape
         n = b.shape[1]
-        fn = _dpia(("matmul", a.shape, b.shape),
-                   lambda: dpia_blas.strategy_matmul(
-                       m, k, n, bm=min(128, m), bk=min(128, k)),
+        params = _tuned("matmul", backend, m=m, k=k, n=n) or {}
+        bm, bk = params.get("bm"), params.get("bk")
+        if not (isinstance(bm, int) and bm > 0 and m % bm == 0):
+            bm = min(128, m)  # malformed/hand-edited cache entry
+        if not (isinstance(bk, int) and bk > 0 and k % bk == 0):
+            bk = min(128, k)
+        fn = _dpia(("matmul", a.shape, b.shape, bm, bk),
+                   lambda: dpia_blas.strategy_matmul(m, k, n, bm=bm, bk=bk),
                    backend)
         return fn(a, b).astype(out_dtype or a.dtype)
     return ref.matmul(a, b, out_dtype=out_dtype)
@@ -114,8 +180,14 @@ def rmsnorm(x, w, eps: float = 1e-6, impl: str | None = None):
         backend = "jnp" if impl == "dpia-jnp" else "pallas"
         d = x.shape[-1]
         x2 = x.reshape(-1, d)
-        fn = _dpia(("rmsnorm", x2.shape),
-                   lambda: dpia_blas.strategy_rmsnorm(x2.shape[0], d, eps),
+        rows = x2.shape[0]
+        params = _tuned("rmsnorm", backend, rows=rows, d=d) or {}
+        rb = params.get("row_block")
+        if not (isinstance(rb, int) and rb > 0 and rows % rb == 0):
+            rb = 8  # the seed default (malformed/missing cache entry)
+        fn = _dpia(("rmsnorm", x2.shape, rb, eps),
+                   lambda: dpia_blas.strategy_rmsnorm(
+                       rows, d, eps, row_block=rb),
                    backend)
         return fn(x2.astype(jnp.float32),
                   w.astype(jnp.float32)).reshape(x.shape).astype(x.dtype)

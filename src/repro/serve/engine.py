@@ -52,12 +52,32 @@ class Request:
 
 class BatchedEngine:
     """Static-batch serving engine: prefill a batch of requests, then decode
-    lock-step until every request finishes (max_new_tokens)."""
+    lock-step until every request finishes (max_new_tokens).
 
-    def __init__(self, model: Model, params, max_seq: int = 512):
+    ``tuning_cache`` (a path or repro.autotune.TuningCache) pre-tunes the
+    strategy autotuner for this model's kernel shapes (prefill and decode,
+    for ``batch_sizes``) at engine build time AND points the process-wide
+    ``repro.kernels.ops`` DPIA dispatch at that cache, so tuned strategies
+    are read from (and new shapes written to) the given cache rather than
+    the global default.  Like ``ops.set_default_impl`` this redirection is
+    process-global (last engine wins); a tuner disabled via
+    ``REPRO_AUTOTUNE=0`` / ``ops.set_autotune(False)`` stays disabled.
+    Shapes outside the warmed set cost one cheap analytic ranking pass on
+    first sight; the warmed params are kept in ``self.tuned``."""
+
+    def __init__(self, model: Model, params, max_seq: int = 512,
+                 tuning_cache=None, batch_sizes=(1, 8)):
         self.model = model
         self.params = params
         self.max_seq = max_seq
+        self.tuned: Dict[str, dict] = {}
+        if tuning_cache is not None:
+            from repro import autotune
+            from repro.kernels import ops
+            self.tuned = autotune.warm_for_model(
+                model.cfg, max_seq=max_seq, cache=tuning_cache,
+                batch_sizes=batch_sizes)
+            ops.set_autotune(ops.autotune_enabled(), cache=tuning_cache)
         self.prefill_fn, self.decode_fn = make_serve_fns(model)
 
     def run(self, requests: List[Request], key=None) -> List[List[int]]:

@@ -1,0 +1,78 @@
+"""Use the real ``hypothesis`` when installed; otherwise a tiny deterministic
+stand-in so the property tests still collect and run (with fixed sampling
+instead of shrinking search).  Covers exactly the API surface this suite
+uses: ``given``, ``settings``, ``strategies.{integers, sampled_from,
+booleans, composite}``.
+"""
+from __future__ import annotations
+
+try:
+    from hypothesis import given, settings  # noqa: F401
+    from hypothesis import strategies as st  # noqa: F401
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    import inspect
+    import random
+
+    HAVE_HYPOTHESIS = False
+    _FALLBACK_EXAMPLES = 8  # keep the dependency-free path fast
+
+    class _Strategy:
+        def __init__(self, sample):
+            self.sample = sample  # rnd: random.Random -> value
+
+    class _StrategiesShim:
+        @staticmethod
+        def integers(min_value=0, max_value=2 ** 16):
+            return _Strategy(lambda rnd: rnd.randint(min_value, max_value))
+
+        @staticmethod
+        def sampled_from(elements):
+            elements = list(elements)
+            return _Strategy(lambda rnd: elements[rnd.randrange(len(elements))])
+
+        @staticmethod
+        def booleans():
+            return _Strategy(lambda rnd: bool(rnd.getrandbits(1)))
+
+        @staticmethod
+        def composite(fn):
+            def make(*args, **kwargs):
+                return _Strategy(
+                    lambda rnd: fn(lambda s: s.sample(rnd), *args, **kwargs))
+            return make
+
+    st = _StrategiesShim()
+
+    def settings(max_examples=_FALLBACK_EXAMPLES, **_ignored):
+        def deco(fn):
+            fn._max_examples = min(int(max_examples), _FALLBACK_EXAMPLES)
+            return fn
+        return deco
+
+    def given(*arg_strats, **kw_strats):
+        def deco(fn):
+            def wrapper(*args, **kwargs):
+                n = getattr(wrapper, "_max_examples", _FALLBACK_EXAMPLES)
+                for i in range(n):
+                    rnd = random.Random(7919 * i + 11)
+                    drawn = [s.sample(rnd) for s in arg_strats]
+                    drawn_kw = {k: s.sample(rnd)
+                                for k, s in sorted(kw_strats.items())}
+                    fn(*args, *drawn, **kwargs, **drawn_kw)
+
+            # hide the drawn parameters from pytest's fixture resolution
+            sig = inspect.signature(fn)
+            params = [p for p in sig.parameters.values()
+                      if p.name not in kw_strats]
+            if arg_strats:
+                params = params[:len(params) - len(arg_strats)]
+            wrapper.__signature__ = sig.replace(parameters=params)
+            wrapper.__name__ = fn.__name__
+            wrapper.__qualname__ = getattr(fn, "__qualname__", fn.__name__)
+            wrapper.__doc__ = fn.__doc__
+            wrapper.__module__ = fn.__module__
+            wrapper._max_examples = getattr(fn, "_max_examples",
+                                            _FALLBACK_EXAMPLES)
+            return wrapper
+        return deco

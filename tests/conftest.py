@@ -1,10 +1,30 @@
 """Shared fixtures.  NOTE: no XLA_FLAGS here on purpose — tests see the real
 single CPU device; multi-device tests spawn subprocesses that set
 --xla_force_host_platform_device_count before importing jax."""
+import os
+import tempfile
+
 import numpy as np
 import pytest
+
+# the suite is written against the host CPU platform (see note above); on
+# images that ship libtpu, keep jax from probing/initialising a TPU backend
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+# keep the strategy autotuner's persistent cache out of the user's home dir
+# (repro.autotune reads this env var lazily, so setting it here is enough)
+os.environ.setdefault(
+    "REPRO_AUTOTUNE_CACHE",
+    os.path.join(tempfile.mkdtemp(prefix="repro-autotune-"), "autotune.json"))
 
 
 @pytest.fixture
 def rng():
     return np.random.RandomState(0)
+
+
+@pytest.fixture
+def tuning_cache(tmp_path):
+    """A fresh, isolated persistent tuning cache."""
+    from repro.autotune import TuningCache
+    return TuningCache(str(tmp_path / "autotune.json"))

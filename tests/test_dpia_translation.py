@@ -5,7 +5,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core.dpia import interp, phrases as P, stage1, stage2, stage3_jnp
 from repro.core.dpia.types import Arr, Num, Pair

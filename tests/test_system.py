@@ -7,7 +7,8 @@ import sys
 
 import pytest
 
-ENV = {"PYTHONPATH": "src", "PATH": "/usr/bin:/bin", "HOME": "/root"}
+ENV = {"PYTHONPATH": "src", "PATH": "/usr/bin:/bin", "HOME": "/root",
+       "JAX_PLATFORMS": "cpu"}  # host-platform test: skip TPU probing
 
 SHARDED_LOWER = r"""
 import os
