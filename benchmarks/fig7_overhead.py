@@ -77,10 +77,11 @@ def run(csv_rows: List[str]) -> None:
     rng = np.random.RandomState(0)
     print("# Fig.7: formal-translation overhead "
           "(DPIA pipeline vs hand-written, CPU wall time + HLO flops)")
+    from repro import compiler
     for c in cases(rng):
         hand_fn = jax.jit(c["hand"])
-        expr, argv = c["build"]()
-        dpia_fn = jax.jit(dpia_blas.compile_op(expr, argv, backend="jnp"))
+        prog = compiler.Program.from_builder(c["build"], name=c["op"])
+        dpia_fn = prog.check().lower().compile("jnp")
 
         got = dpia_fn(*c["args"])
         want = hand_fn(*c["args"])

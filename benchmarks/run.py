@@ -26,6 +26,7 @@ def _time(fn, args, iters=10) -> float:
 
 
 def bench_strategy_spread(csv_rows: List[str]) -> None:
+    from repro import compiler
     from repro.kernels import dpia_blas
     print("# strategy spread: the same gemv under different strategies")
     m, n = 1024, 1024
@@ -37,8 +38,8 @@ def bench_strategy_spread(csv_rows: List[str]) -> None:
         ("rowblock64", lambda: dpia_blas.strategy_gemv(m, n, 64)),
         ("rowblock256", lambda: dpia_blas.strategy_gemv(m, n, 256)),
     ]:
-        expr, argv = build()
-        fn = jax.jit(dpia_blas.compile_op(expr, argv, backend="jnp"))
+        prog = compiler.Program.from_builder(build, name=f"gemv/{label}")
+        fn = prog.check().lower().compile("jnp")
         t = _time(fn, (A, x))
         print(f"  gemv/{label:12s} {t:9.1f} us")
         csv_rows.append(f"strategy/gemv/{label},{t:.1f},")

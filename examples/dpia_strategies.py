@@ -41,8 +41,8 @@ oracle = interp.interp(expr0, {argv0[0].name: A, argv0[1].name: x})
 
 print(f"gemv {M}x{N}: strategy comparison (jnp backend, jit wall time)")
 for name, builder in candidates.items():
-    expr, argv = builder()
-    fn = jax.jit(dpia_blas.compile_op(expr, argv, backend="jnp"))
+    from repro import compiler
+    fn = compiler.Program.from_builder(builder, name=name).check().lower().compile("jnp")
     got = fn(A, x)
     np.testing.assert_allclose(np.asarray(got), np.asarray(oracle),
                                rtol=1e-3, atol=1e-3)

@@ -2,22 +2,24 @@
 
 1. Write the functional spec (paper eq. (1)).
 2. Derive a TPU strategy by semantics-preserving rewrites (paper eq. (2)).
-3. Compile through the formal translation (Stage I -> II -> III).
-4. Run all three backends and check them against the mathematical reading.
+3. Stage the pipeline explicitly with ``repro.compiler.Program``:
+   ``check()`` (SCIR race-freedom) -> ``lower()`` (Stage I -> II) ->
+   ``compile(backend)`` (Stage III via the backend registry).
+4. Run all registered single-host backends against the mathematical reading.
 5. Let the autotuner pick the strategy instead (repro.autotune): searched
    once, then served from the persistent tuning cache.
+6. Scope kernel dispatch with ``compiler.options`` (thread-local — the
+   replacement for the old process-global ``set_default_impl``).
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
-import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.dpia import phrases as P
-from repro.core.dpia import check, interp, stage1, stage2, strategies
+from repro import compiler
+from repro.core.dpia import interp, phrases as P, strategies
 from repro.core.dpia.pretty import show
 from repro.core.dpia.types import Arr, Num
-from repro.kernels import dpia_blas
 
 N = 8192
 
@@ -31,40 +33,55 @@ print("== functional spec ==")
 print(show(dot_spec), "\n")
 
 # -- 2. a strategy: fuse, block for the grid, VPU-reduce each block ----------
-fused = strategies.fuse_map_into_reduce(dot_spec)
-blocked = strategies.blocked_reduce(fused, 2048, partial_level=P.GRID(0),
-                                    combine=lambda x, a: P.add(a, x))
+# Strategies are rewrites (expr -> expr); Program.lower applies them and
+# translates the result to imperative DPIA (Stage I -> II).
+def tpu_strategy(e):
+    fused = strategies.fuse_map_into_reduce(e)
+    return strategies.blocked_reduce(fused, 2048, partial_level=P.GRID(0),
+                                     combine=lambda x, a: P.add(a, x))
+
+prog = compiler.Program(dot_spec, [xs, ys], name="dot").lower(tpu_strategy)
 print("== strategy (after rewrites) ==")
-print(show(blocked), "\n")
+print(show(prog.expr), "\n")
 
-# -- 3. formal translation to imperative code --------------------------------
-out = P.var_acc("out", Num())
-imperative = stage2.expand(stage1.translate(blocked, out))
-check.check(imperative)          # SCIR: well-typed + data-race free
+# -- 3. the staged pipeline: SCIR check, then inspect the imperative form ----
+prog.check()                     # well-typed + data-race free, or it raises
 print("== imperative DPIA (stage II) ==")
-print(show(imperative)[:800], "...\n")
+print(prog.show()[:800], "...\n")
 
-# -- 4. execute via all backends against the oracle --------------------------
+# -- 4. execute via every registered single-host backend against the oracle --
 rng = np.random.RandomState(0)
 ax = jnp.asarray(rng.randn(N), "float32")
 ay = jnp.asarray(rng.randn(N), "float32")
 oracle = interp.interp(dot_spec, {"xs": ax, "ys": ay})
 
-for backend in ("jnp", "pallas"):
-    fn = jax.jit(dpia_blas.compile_op(blocked, [xs, ys], backend=backend))
+for backend in compiler.backend_names():
+    if compiler.get_backend(backend).requires:
+        continue                 # e.g. shardmap needs a mesh
+    fn = prog.check().lower().compile(backend)
     got = fn(ax, ay)
     np.testing.assert_allclose(got, oracle, rtol=1e-4)
     print(f"backend {backend:8s}: {float(got):+.6f}  == oracle OK")
 print(f"oracle (vmap reading):  {float(oracle):+.6f}")
 
 # -- 5. or let the autotuner derive the strategy ------------------------------
+# tune() consumes Programs: the candidate space comes from rewriting the
+# program's functional spec, exactly as we rewrote it by hand above.
 from repro import autotune
 
-res = autotune.tune(dot_spec, arg_vars=[xs, ys], backend="jnp",
-                    top_k=3, iters=3)
+spec_prog = compiler.Program(dot_spec, [xs, ys], name="dot-spec")
+res = autotune.tune(spec_prog, backend="jnp", top_k=3, iters=3)
 print(f"\n== autotuned strategy ==\n{res.params}  "
       f"({res.source}, {res.n_candidates} candidates"
       + (f", {res.measured_us:.0f} us" if res.measured_us else "") + ")")
-res2 = autotune.tune(dot_spec, arg_vars=[xs, ys], backend="jnp")
+res2 = autotune.tune(spec_prog, backend="jnp")
 print(f"second tune call: served from {res2.source} "
       f"({autotune.default_cache().path})")
+
+# -- 6. scoped kernel dispatch (no process globals) ---------------------------
+from repro.kernels import ops
+
+with compiler.options(backend="dpia-jnp", autotune=False):
+    scoped = ops.dot(ax, ay)     # the whole model zoo dispatches like this
+np.testing.assert_allclose(scoped, oracle, rtol=1e-4)
+print(f"\nops.dot under options(backend='dpia-jnp'): {float(scoped):+.6f} OK")

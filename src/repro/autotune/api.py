@@ -7,6 +7,7 @@
     res.params                                     # {"block": 4096, "leaf": ...}
 
     res = autotune.tune(expr, arg_vars=[xs, ys])   # arbitrary DPIA expression
+    res = autotune.tune(program)                   # a repro.compiler.Program
 
     @autotune.autotuned("matmul")
     def mm(a, b): ...                              # body is documentation;
@@ -25,13 +26,14 @@ import functools
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Union
 
+from repro.compiler import Program
 from repro.core.dpia import phrases as P
 
 from . import measure as measure_mod
 from . import space as space_mod
 from .cache import TuningCache, default_cache, make_key
 
-Spec = Union[str, P.Phrase]
+Spec = Union[str, P.Phrase, Program]
 
 
 @dataclass
@@ -64,16 +66,33 @@ def tune(spec: Spec, *, backend: str = "jnp", dtype: str = "float32",
          **shape) -> TuneResult:
     """Pick the best strategy for ``spec`` at a concrete shape.
 
-    ``spec`` is either a kernel name ("dot", "asum", "scal", "matmul",
-    "rmsnorm", "softmax") with its shape kwargs, or a DPIA functional
-    expression (then ``arg_vars`` must list its argument Vars and the
-    space comes from applying the rewrite rules to the expression itself).
+    ``spec`` is a kernel name ("dot", "asum", "scal", "matmul", "rmsnorm",
+    "softmax") with its shape kwargs, a DPIA functional expression (then
+    ``arg_vars`` must list its argument Vars and the space comes from
+    applying the rewrite rules to the expression itself), or a
+    ``repro.compiler.Program`` (kernel/shape metadata is used when present,
+    else its expression + arg Vars).
 
     ``measure=False`` ranks analytically only (no compilation — cheap
     enough for inline use on a serving path).  ``verify=True`` additionally
     checks every measured candidate's output against the default strategy.
     """
     c = _resolve_cache(cache)
+
+    if isinstance(spec, Program):
+        if spec.kernel is not None:
+            # kernel metadata names the search family; explicit shape kwargs
+            # override the program's shape (they must not silently diverge)
+            if not shape:
+                shape = dict(spec.shape)
+            spec = spec.kernel
+        else:
+            if spec.expr is None:
+                raise ValueError("tune: an imperative-only Program has no "
+                                 "functional term to enumerate rewrites on")
+            if arg_vars is None:
+                arg_vars = spec.arg_vars
+            spec = spec.expr
 
     if isinstance(spec, str):
         kernel = spec
@@ -83,8 +102,9 @@ def tune(spec: Spec, *, backend: str = "jnp", dtype: str = "float32",
                              "expression specs")
         kernel = f"expr:{space_mod.expr_signature(spec)}"
     else:
-        raise TypeError(f"tune: spec must be a kernel name or a DPIA "
-                        f"expression, got {type(spec).__name__}")
+        raise TypeError(f"tune: spec must be a kernel name, a DPIA "
+                        f"expression, or a Program, got "
+                        f"{type(spec).__name__}")
 
     # cache check happens BEFORE any space enumeration: a hit really is free
     key = make_key(kernel, shape, dtype, backend, mesh)
@@ -195,9 +215,6 @@ def autotuned(kernel: str, *, backend: str = "jnp", cache=None,
 
         @functools.wraps(fn)
         def wrapper(*arrays):
-            import jax
-
-            from repro.kernels import dpia_blas
             shape = shape_fn(arrays)
             memo_key = (tuple(sorted(shape.items())), backend)
             if memo_key not in compiled:
@@ -205,9 +222,8 @@ def autotuned(kernel: str, *, backend: str = "jnp", cache=None,
                            measure=measure, **shape, **tune_kw)
                 cand = space_mod.candidate_from_params(
                     kernel, res.params, **shape)
-                expr, argv = cand.build()
-                compiled[memo_key] = jax.jit(
-                    dpia_blas.compile_op(expr, argv, backend=backend))
+                compiled[memo_key] = (cand.program().check().lower()
+                                      .compile(backend, jit=True))
             return compiled[memo_key](*arrays)
 
         wrapper.compiled = compiled

@@ -38,13 +38,12 @@ def args_for(arg_vars: Sequence[P.Var], seed: int = 0) -> Tuple:
 
 
 def compile_candidate(cand: Candidate, backend: str = "jnp"):
-    """(jitted callable, concrete args) for a candidate, via the pipeline."""
-    import jax
-
-    from repro.kernels import dpia_blas
-    expr, argv = cand.build()
-    fn = jax.jit(dpia_blas.compile_op(expr, argv, backend=backend))
-    return fn, args_for(argv)
+    """(jitted callable, concrete args) for a candidate, via the staged
+    pipeline: the candidate becomes a ``repro.compiler.Program`` and runs
+    ``check() -> lower() -> compile(backend)``."""
+    prog = cand.program()
+    fn = prog.check().lower().compile(backend, jit=True)
+    return fn, args_for(prog.arg_vars)
 
 
 def time_callable(fn, args, iters: int = 5, warmup: int = 1) -> float:

@@ -55,6 +55,13 @@ class Candidate:
     def params_key(self) -> str:
         return params_key(self.params_dict)
 
+    def program(self):
+        """This candidate as a ``repro.compiler.Program`` — the staged entry
+        the tuner's measure/compile paths consume."""
+        from repro.compiler import Program
+        expr, arg_vars = self.build()
+        return Program(expr, arg_vars, name=f"{self.kernel}[{self.params_key()}]")
+
 
 def params_key(params: Dict[str, object]) -> str:
     """Canonical string form of a params dict (cache / timing-table key)."""

@@ -1,0 +1,53 @@
+"""repro.compiler — the paper's staged pipeline as a first-class API.
+
+The paper's claim is a *staged, strategy-preserving* compilation chain:
+
+    functional term --rewrites--> strategy --Stage I/II--> race-free
+    imperative DPIA --Stage III--> backend code
+
+This package makes that chain the public product instead of hiding it
+behind stringly-typed dispatch and process globals:
+
+  backends — registry of Stage III targets (``jnp`` / ``pallas`` /
+             ``shardmap`` self-register; user backends plug in the same way)
+  options  — :class:`CompileOptions` threaded explicitly + thread-local
+             ``with compiler.options(...):`` scoping (replaces
+             ``ops.set_default_impl`` / ``ops.set_autotune`` globals)
+  program  — :class:`Program` with the staged fluent API
+             ``check()`` -> ``lower(strategy)`` -> ``compile(backend)``
+
+Quick use::
+
+    from repro import compiler
+
+    prog = compiler.Program.from_kernel("dot", n=8192)
+    fn = prog.check().lower("autotune").compile("pallas")
+    y = fn(xs, ys)
+
+    with compiler.options(backend="dpia-pallas", autotune=False):
+        y = repro.kernels.ops.matmul(a, b)     # scoped, thread-local
+
+See docs/compiler.md for the walkthrough (including writing a custom
+backend).
+"""
+# NOTE: import order matters — ``backends`` and ``options`` must be bound
+# before ``program`` pulls in repro.core.dpia, whose stage3 modules import
+# repro.compiler.backends back to self-register.
+from . import backends, options as _options_mod  # noqa: F401
+from .backends import (  # noqa: F401
+    Backend, backend_names, get_backend, ops_impls, register_backend,
+    unregister_backend,
+)
+from .options import (  # noqa: F401
+    CompileOptions, current_options, default_options, options,
+    set_default_options,
+)
+from .program import CompiledKernel, Program, program  # noqa: F401
+
+__all__ = [
+    "Backend", "backend_names", "get_backend", "ops_impls",
+    "register_backend", "unregister_backend",
+    "CompileOptions", "options", "current_options", "default_options",
+    "set_default_options",
+    "Program", "CompiledKernel", "program",
+]

@@ -1,0 +1,122 @@
+"""Stage III backend registry — the ``"jnp" | "pallas" | "shardmap"`` string
+matrix as *data* instead of if/elif chains.
+
+A :class:`Backend` wraps one Stage III code generator (functional/imperative
+DPIA -> executable callable).  The built-in generators in
+``repro.core.dpia.stage3_*`` self-register on import; user code can register
+additional targets with :func:`register_backend` and they become valid
+everywhere a backend name is accepted (``Program.compile``, the kernel-layer
+``dpia-<name>`` impls, option validation, error messages).
+
+This module deliberately imports nothing from ``repro.core.dpia`` at module
+level: the stage3 modules import *us* to self-register, and keeping the
+registry dependency-free makes that cycle-safe.  Lookup lazily imports
+``repro.core.dpia`` so the built-ins are always populated before first use.
+"""
+from __future__ import annotations
+
+import threading
+from dataclasses import dataclass
+from typing import Callable, Dict, Tuple
+
+__all__ = [
+    "Backend", "register_backend", "unregister_backend", "get_backend",
+    "backend_names", "ops_impls",
+]
+
+
+@dataclass(frozen=True)
+class Backend:
+    """One Stage III target.
+
+    ``compile(expr, arg_vars, **kw) -> callable`` produces the executable
+    (un-jitted) function.  ``accepts`` names the keyword arguments the
+    generator understands (``"check"``, ``"lowered"``, ``"interpret"``, ...):
+    ``Program.compile`` threads options through only when accepted.
+    ``requires`` names keywords the caller *must* supply (e.g. ``"mesh"``
+    for the shard_map backend) — backends with requirements are excluded
+    from the kernel-layer ``dpia-<name>`` impl matrix.
+    """
+    name: str
+    compile: Callable[..., Callable]
+    accepts: Tuple[str, ...] = ()
+    requires: Tuple[str, ...] = ()
+    description: str = ""
+
+
+_REGISTRY: Dict[str, Backend] = {}
+_ALIASES: Dict[str, str] = {}
+_LOCK = threading.Lock()
+_BUILTINS_LOADED = False
+
+
+def _ensure_builtins() -> None:
+    """Populate the registry with the stage3 built-ins (idempotent)."""
+    global _BUILTINS_LOADED
+    if _BUILTINS_LOADED:
+        return
+    # importing the package runs the stage3 modules' self-registration
+    import repro.core.dpia  # noqa: F401
+    _BUILTINS_LOADED = True
+
+
+def register_backend(backend: Backend, *, aliases: Tuple[str, ...] = (),
+                     overwrite: bool = False) -> Backend:
+    """Add a Stage III backend (and optional alias names) to the registry."""
+    if not isinstance(backend, Backend):
+        raise TypeError(f"register_backend expects a Backend, got "
+                        f"{type(backend).__name__}")
+    with _LOCK:
+        if backend.name in _REGISTRY and not overwrite:
+            raise ValueError(f"backend {backend.name!r} is already registered "
+                             f"(pass overwrite=True to replace it)")
+        _REGISTRY[backend.name] = backend
+        for a in aliases:
+            _ALIASES[a] = backend.name
+    return backend
+
+
+def unregister_backend(name: str) -> None:
+    """Remove a backend (and any aliases pointing at it)."""
+    with _LOCK:
+        _REGISTRY.pop(name, None)
+        for a in [a for a, t in _ALIASES.items() if t == name]:
+            del _ALIASES[a]
+
+
+def get_backend(name) -> Backend:
+    """Resolve a backend by name/alias (or pass a Backend through).
+
+    Raises ``ValueError`` naming the valid backends on an unknown name —
+    the error message is the registry's contents, so it is always current.
+    """
+    if isinstance(name, Backend):
+        return name
+    _ensure_builtins()
+    resolved = _ALIASES.get(name, name)
+    try:
+        return _REGISTRY[resolved]
+    except KeyError:
+        raise ValueError(
+            f"unknown backend {name!r}; registered backends: "
+            f"{backend_names()} (aliases: {sorted(_ALIASES)})") from None
+
+
+def backend_names() -> Tuple[str, ...]:
+    """Registered backend names, sorted (aliases not included)."""
+    _ensure_builtins()
+    return tuple(sorted(_REGISTRY))
+
+
+def ops_impls() -> Tuple[str, ...]:
+    """Valid kernel-layer impl names for ``repro.kernels.ops`` dispatch.
+
+    The two native impls plus one ``dpia-<backend>`` entry per registered
+    single-host backend (backends that *require* extra compile arguments,
+    e.g. a mesh, cannot be driven from the op layer and are excluded)."""
+    names = ["xla", "pallas"]
+    for b in backend_names():
+        if get_backend(b).requires:
+            continue
+        names.append("dpia-" + b)
+    return tuple(dict.fromkeys(names))

@@ -13,6 +13,11 @@ Public surface:
   stage3_shardmap — mesh-level strategies -> shard_map + collectives
   strategies      — semantics-preserving rewrites (Steuwer et al. 2015 style)
 
+The Stage III modules self-register in the ``repro.compiler`` backend
+registry; drive the whole pipeline through the staged API —
+``repro.compiler.Program(expr, args).check().lower().compile(backend)`` —
+rather than calling the stages directly (see docs/compiler.md).
+
 Autotuning
 ----------
 Strategy *choice* lives outside this package, in ``repro.autotune``: the

@@ -339,26 +339,45 @@ def _run_loop(n: int, mk_body, env: Dict, store: Store, unroll: bool) -> Store:
 # Whole-pipeline driver
 # ---------------------------------------------------------------------------
 
-def compile_expr(expr: P.Phrase, arg_vars, *, check: bool = True):
+def compile_expr(expr: P.Phrase, arg_vars, *, check: bool = True,
+                 lowered=None):
     """Functional expression -> python callable via Stages I-III (jnp).
 
-    Returns ``fn(*arrays) -> value`` suitable for jax.jit.
+    Returns ``fn(*arrays) -> value`` suitable for jax.jit.  ``lowered``
+    optionally supplies an already-translated ``(command, out_var)`` pair
+    (the staged repro.compiler path) so Stage I/II is not redone here.
     """
     from . import check as chk
     from . import stage1
 
-    d = P.exp_data(expr)
-    out = P.Var("out#", AccT(d))
-    cmd = stage2.expand(stage1.translate(expr, out))
+    if lowered is not None:
+        cmd, out = lowered
+        d = out.t.d
+    else:
+        d = P.exp_data(expr)
+        out = P.Var("out#", AccT(d))
+        cmd = stage2.expand(stage1.translate(expr, out))
     if check:
         P.type_of(cmd)
         chk.check_race_free(cmd)
     names = [v.name for v in arg_vars]
+    out_name = out.name
 
     def fn(*args):
         env = dict(zip(names, args))
-        store: Store = {"out#": zero_value(d)}
+        store: Store = {out_name: zero_value(d)}
         store = exec_comm(cmd, env, store)
-        return store["out#"]
+        return store[out_name]
 
     return fn
+
+
+# self-register as a Stage III target (see repro.compiler.backends)
+from repro.compiler.backends import Backend as _Backend  # noqa: E402
+from repro.compiler.backends import register_backend as _register  # noqa: E402
+
+_register(_Backend(
+    name="jnp", compile=compile_expr, accepts=("check", "lowered"),
+    description="imperative DPIA -> executable JAX (lax.fori_loop reference "
+                "order)"),
+    aliases=("dpia-jnp",), overwrite=True)

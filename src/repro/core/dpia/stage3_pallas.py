@@ -479,15 +479,21 @@ def exec_host(p: P.Phrase, env: Dict, store: Store, interpret: bool) -> Store:
 # ---------------------------------------------------------------------------
 
 def compile_expr_pallas(expr: P.Phrase, arg_vars, *, interpret: bool = True,
-                        check: bool = True):
+                        check: bool = True, lowered=None):
     """Functional expression -> callable running grid strategies as Pallas
-    kernels (Stage I -> II -> kernel extraction)."""
+    kernels (Stage I -> II -> kernel extraction).  ``lowered`` optionally
+    supplies an already-translated ``(command, out_var)`` pair (the staged
+    repro.compiler path) so Stage I/II is not redone here."""
     from . import check as chk
     from . import hoist as hoist_mod
 
-    d = P.exp_data(expr)
-    out = P.Var("out#", AccT(d))
-    cmd = stage2.expand(stage1.translate(expr, out))
+    if lowered is not None:
+        cmd, out = lowered
+        d = out.t.d
+    else:
+        d = P.exp_data(expr)
+        out = P.Var("out#", AccT(d))
+        cmd = stage2.expand(stage1.translate(expr, out))
     # SCIR check happens BEFORE hoisting (as in the paper, where section 6.4 is
     # a code-generation step downstream of the type system; hoisting preserves
     # race freedom by construction — each iteration owns its indexed slice).
@@ -497,11 +503,24 @@ def compile_expr_pallas(expr: P.Phrase, arg_vars, *, interpret: bool = True,
     # paper 6.4: HBM temporaries must be allocated outside kernels
     cmd = hoist_mod.hoist(cmd, spaces=(P.HBM,))
     names = [v.name for v in arg_vars]
+    out_name = out.name
 
     def fn(*args):
         env = dict(zip(names, args))
-        store: Store = {"out#": zero_value(d)}
+        store: Store = {out_name: zero_value(d)}
         store = exec_host(cmd, env, store, interpret)
-        return store["out#"]
+        return store[out_name]
 
     return fn
+
+
+# self-register as a Stage III target (see repro.compiler.backends)
+from repro.compiler.backends import Backend as _Backend  # noqa: E402
+from repro.compiler.backends import register_backend as _register  # noqa: E402
+
+_register(_Backend(
+    name="pallas", compile=compile_expr_pallas,
+    accepts=("check", "lowered", "interpret"),
+    description="grid-level imperative DPIA -> pl.pallas_call kernels (TPU; "
+                "interpret mode on CPU)"),
+    aliases=("dpia-pallas",), overwrite=True)

@@ -170,3 +170,15 @@ def _elem(split: P.Split):
     d = P.exp_data(split)
     assert isinstance(d, Arr) and isinstance(d.elem, Arr)
     return d.elem.elem
+
+
+# self-register as a Stage III target (see repro.compiler.backends)
+from repro.compiler.backends import Backend as _Backend  # noqa: E402
+from repro.compiler.backends import register_backend as _register  # noqa: E402
+
+_register(_Backend(
+    name="shardmap", compile=compile_expr_shardmap,
+    accepts=("mesh", "inner", "check"), requires=("mesh",),
+    description="mesh-level strategies -> shard_map + collectives (pass "
+                "mesh=, optional inner='jnp'|'pallas')"),
+    aliases=("dpia-shardmap",), overwrite=True)

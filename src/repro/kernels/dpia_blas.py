@@ -8,14 +8,15 @@ Each op comes in two forms:
     grid-blocked (`map[grid]` over `split`), whole-block VPU leaf ops (the
     lanes level), sequential combine.
 
-Build functions return ``(expr, arg_vars)``; ``compile_op`` picks a backend.
+Build functions return ``(expr, arg_vars)``; compile them through the staged
+API — ``repro.compiler.Program(expr, arg_vars).check().lower()
+.compile(backend)`` — or the deprecated ``compile_op`` shim.
 """
 from __future__ import annotations
 
 from typing import List, Tuple
 
 from repro.core.dpia import phrases as P
-from repro.core.dpia import stage3_jnp, stage3_pallas
 from repro.core.dpia.types import Arr, Num
 
 Expr = P.Phrase
@@ -183,11 +184,18 @@ def strategy_matmul(m: int, k: int, n: int, bm: int = 128, bk: int = 128
 # ---------------------------------------------------------------------------
 
 def compile_op(expr: Expr, arg_vars, backend: str = "jnp", **kw):
-    if backend == "jnp":
-        return stage3_jnp.compile_expr(expr, arg_vars, **kw)
-    if backend == "pallas":
-        return stage3_pallas.compile_expr_pallas(expr, arg_vars, **kw)
-    if backend == "shardmap":
-        from repro.core.dpia import stage3_shardmap
-        return stage3_shardmap.compile_expr_shardmap(expr, arg_vars, **kw)
-    raise ValueError(f"unknown backend {backend!r}")
+    """Deprecated: compile via the staged API instead ::
+
+        repro.compiler.Program(expr, arg_vars).check().lower() \\
+            .compile(backend, jit=False)
+
+    This shim delegates to the ``repro.compiler`` backend registry (raising
+    ``ValueError`` with the registered names on an unknown backend) and
+    returns the un-jitted callable, exactly as the seed did."""
+    import warnings
+    warnings.warn(
+        "dpia_blas.compile_op is deprecated; use repro.compiler.Program("
+        "expr, arg_vars).check().lower().compile(backend)",
+        DeprecationWarning, stacklevel=2)
+    from repro.compiler import get_backend
+    return get_backend(backend).compile(expr, arg_vars, **kw)

@@ -4,6 +4,7 @@ driver used by examples/serve_lm.py).
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 from typing import Dict, List, Optional
 
@@ -56,31 +57,41 @@ class BatchedEngine:
 
     ``tuning_cache`` (a path or repro.autotune.TuningCache) pre-tunes the
     strategy autotuner for this model's kernel shapes (prefill and decode,
-    for ``batch_sizes``) at engine build time AND points the process-wide
-    ``repro.kernels.ops`` DPIA dispatch at that cache, so tuned strategies
-    are read from (and new shapes written to) the given cache rather than
-    the global default.  Like ``ops.set_default_impl`` this redirection is
-    process-global (last engine wins); a tuner disabled via
-    ``REPRO_AUTOTUNE=0`` / ``ops.set_autotune(False)`` stays disabled.
-    Shapes outside the warmed set cost one cheap analytic ranking pass on
-    first sight; the warmed params are kept in ``self.tuned``."""
+    for ``batch_sizes``) at engine build time, and ``run`` scopes the
+    ``repro.kernels.ops`` DPIA dispatch to that cache via
+    ``repro.compiler.options(tuning_cache=...)`` — thread-local, per-engine,
+    so concurrent engines with different caches no longer race on a process
+    global.  A tuner disabled via ``REPRO_AUTOTUNE=0`` or the enclosing
+    options scope stays disabled.  Shapes outside the warmed set cost one
+    cheap analytic ranking pass on first sight; the warmed params are kept
+    in ``self.tuned``."""
 
     def __init__(self, model: Model, params, max_seq: int = 512,
                  tuning_cache=None, batch_sizes=(1, 8)):
         self.model = model
         self.params = params
         self.max_seq = max_seq
+        self.tuning_cache = tuning_cache
         self.tuned: Dict[str, dict] = {}
         if tuning_cache is not None:
             from repro import autotune
-            from repro.kernels import ops
             self.tuned = autotune.warm_for_model(
                 model.cfg, max_seq=max_seq, cache=tuning_cache,
                 batch_sizes=batch_sizes)
-            ops.set_autotune(ops.autotune_enabled(), cache=tuning_cache)
         self.prefill_fn, self.decode_fn = make_serve_fns(model)
 
+    def _options_scope(self):
+        """The compile-options scope this engine's kernels run under."""
+        from repro import compiler
+        if self.tuning_cache is None:
+            return contextlib.nullcontext()
+        return compiler.options(tuning_cache=self.tuning_cache)
+
     def run(self, requests: List[Request], key=None) -> List[List[int]]:
+        with self._options_scope():
+            return self._run(requests, key)
+
+    def _run(self, requests: List[Request], key=None) -> List[List[int]]:
         cfg = self.model.cfg
         key = key if key is not None else jax.random.PRNGKey(0)
         b = len(requests)

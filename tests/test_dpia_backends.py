@@ -17,7 +17,8 @@ from repro.kernels import dpia_blas
 def both_backends(expr, argv, args, rtol=2e-3):
     want = interp.interp(expr, {v.name: a for v, a in zip(argv, args)})
     for backend in ("jnp", "pallas"):
-        fn = jax.jit(dpia_blas.compile_op(expr, argv, backend=backend))
+        from repro import compiler
+        fn = compiler.Program(expr, argv).check().lower().compile(backend)
         got = fn(*args)
         np.testing.assert_allclose(np.asarray(got), np.asarray(want),
                                    rtol=rtol, atol=rtol,

@@ -80,7 +80,8 @@ def test_rewrite_chain_compiles_and_matches(rng):
                                         combine=lambda x, a: P.add(a, x))
     ax = jnp.asarray(rng.randn(n), "float32")
     ay = jnp.asarray(rng.randn(n), "float32")
-    fn = jax.jit(dpia_blas.compile_op(blocked, argv, backend="jnp"))
+    from repro import compiler
+    fn = compiler.Program(blocked, argv).check().lower().compile("jnp")
     np.testing.assert_allclose(np.asarray(fn(ax, ay)),
                                np.asarray(ref.dot(ax, ay)), rtol=1e-4)
 
@@ -220,8 +221,7 @@ def test_tuned_strategies_stay_correct(tuning_cache, rng):
     ]:
         res = autotune.tune(kernel, cache=tuning_cache, measure=False, **shape)
         cand = space.candidate_from_params(kernel, res.params, **shape)
-        expr, argv = cand.build()
-        fn = jax.jit(dpia_blas.compile_op(expr, argv, backend="jnp"))
+        fn = cand.program().check().lower().compile("jnp")
         got = np.asarray(fn(*args))
         want = {"dot": lambda: ref.dot(*args),
                 "rmsnorm": lambda: ref.rmsnorm(*args),

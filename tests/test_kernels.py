@@ -87,7 +87,8 @@ def test_dpia_blas_sweep(rng, name, builder, mk, n, backend):
     expr, argv = builder(n)
     args = mk(rng, n)
     want = interp.interp(expr, {v.name: a for v, a in zip(argv, args)})
-    fn = jax.jit(dpia_blas.compile_op(expr, argv, backend=backend))
+    from repro import compiler
+    fn = compiler.Program(expr, argv).check().lower().compile(backend)
     got = fn(*args)
     np.testing.assert_allclose(np.asarray(got), np.asarray(want),
                                rtol=2e-3, atol=2e-3)
@@ -99,7 +100,8 @@ def test_dpia_gemv_sweep(rng, m, n, rb, backend):
     expr, argv = dpia_blas.strategy_gemv(m, n, row_block=rb)
     a = jnp.asarray(rng.randn(m, n), "float32")
     x = jnp.asarray(rng.randn(n), "float32")
-    fn = jax.jit(dpia_blas.compile_op(expr, argv, backend=backend))
+    from repro import compiler
+    fn = compiler.Program(expr, argv).check().lower().compile(backend)
     np.testing.assert_allclose(np.asarray(fn(a, x)), np.asarray(a @ x),
                                rtol=2e-3, atol=2e-3)
 
