@@ -1,0 +1,285 @@
+"""Serving fast-path benchmark: prefill latency, decode tokens/s, host-sync
+and recompile accounting — the numbers behind the decode-hot-path rebuild.
+
+Compares three drivers over the same dense LM and request mix:
+
+  legacy      — faithful replica of the pre-PR ``BatchedEngine`` loop: one
+                jitted decode step per token, sampling on the host, one
+                device->host sync per token (``int(tok)``), whole batch at
+                ``requests[0].temperature``;
+  fused       — ``BatchedEngine``: jitted ``lax.scan`` decode chunks with
+                per-request sampling fused in, donated cache/buffers, one
+                host sync per chunk;
+  continuous  — ``ContinuousEngine``: the same fused chunks behind the
+                continuous-batching scheduler (fixed slots, bucketed
+                prefill).
+
+Also measures recompiles: after one warm pass over the bucketed shape set,
+further traffic must hit the jit caches exactly (asserted unless
+``--no-assert``), and the fused engines must beat legacy decode throughput
+by >= 2x on CPU.
+
+Usage:
+  PYTHONPATH=src python benchmarks/serve_bench.py [--smoke] [--out FILE]
+
+Writes BENCH_serve.json (``--out`` to override) and prints a summary.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from typing import List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+# ---------------------------------------------------------------------------
+# the pre-PR engine, replicated for an honest baseline
+# ---------------------------------------------------------------------------
+
+class LegacyBatchedEngine:
+    """The seed's static-batch loop: per-token dispatch + per-token host
+    sync + single-temperature sampling (including its ``requests[0]``
+    temperature bug, kept verbatim — this is the measured baseline, not an
+    endorsement)."""
+
+    def __init__(self, model, params, max_seq: int = 512):
+        self.model = model
+        self.params = params
+        self.max_seq = max_seq
+        self.prefill_fn = jax.jit(
+            lambda p, t, c: model.prefill(p, t, c))
+        self.decode_fn = jax.jit(
+            lambda p, tok, c, pos: model.decode_step(p, tok, c, pos))
+
+    def run(self, requests, key=None) -> List[List[int]]:
+        from repro.serve.engine import sample
+        cfg = self.model.cfg
+        key = key if key is not None else jax.random.PRNGKey(0)
+        b = len(requests)
+        s = max(int(r.prompt.shape[0]) for r in requests)
+
+        def pad(p):
+            pad_n = s - p.shape[0]
+            return jnp.pad(p, [(pad_n, 0)] + [(0, 0)] * (p.ndim - 1))
+        tokens = jnp.stack([pad(r.prompt) for r in requests])
+        cache = self.model.init_cache(b, self.max_seq)
+        logits, cache = self.prefill_fn(self.params, tokens, cache)
+
+        max_new = max(r.max_new_tokens for r in requests)
+        outs = [[] for _ in requests]
+        pos = s
+        for step in range(max_new):
+            key, sub = jax.random.split(key)
+            temp = requests[0].temperature
+            nxt = sample(logits, sub, temperature=temp)
+            for i, r in enumerate(requests):
+                if step < r.max_new_tokens:
+                    outs[i].append(int(nxt[i]))          # per-token sync
+            tok = nxt[:, None]
+            if cfg.n_codebooks:
+                tok = jnp.broadcast_to(tok[..., None],
+                                       (b, 1, cfg.n_codebooks))
+            logits, cache = self.decode_fn(self.params, tok, cache,
+                                           jnp.int32(pos))
+            pos += 1
+        return outs
+
+
+# ---------------------------------------------------------------------------
+# harness
+# ---------------------------------------------------------------------------
+
+def _mk_model(full: bool):
+    from repro.models.common import ModelConfig
+    from repro.models.transformer import Model
+    if full:
+        # compute-heavier model with a serving-sized KV cache (~32 MB),
+        # where the legacy loop's per-step undonated cache copy is the
+        # dominating cost the donated fused chunk removes
+        cfg = ModelConfig(name="serve-bench-full", family="dense", n_layers=4,
+                          d_model=256, n_heads=8, n_kv_heads=2, d_ff=768,
+                          vocab=1024, dtype="float32", remat=False,
+                          max_seq=1024)
+    else:
+        # the default config is deliberately overhead-dominated: the decode
+        # harness (dispatch, host syncs, cache copies) is what this
+        # benchmark measures; kernel-level compute has its own benchmarks
+        cfg = ModelConfig(name="serve-bench", family="dense",
+                          n_layers=2, d_model=128, n_heads=4, n_kv_heads=2,
+                          d_ff=256, vocab=512, dtype="float32", remat=False,
+                          max_seq=128)
+    model = Model(cfg)
+    params = model.init_params(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def _mk_requests(cfg, n: int, prompt_len: int, max_new: int):
+    from repro.serve.engine import Request
+    key = jax.random.PRNGKey(42)
+    return [Request(
+        prompt=jax.random.randint(jax.random.fold_in(key, i),
+                                  (prompt_len + 2 * (i % 3),), 0, cfg.vocab),
+        max_new_tokens=max_new, temperature=0.0) for i in range(n)]
+
+
+def _timed_runs(engines, reqs, key, repeats: int = 4) -> list:
+    """Per engine: (tokens, best wall time).  The engines are measured
+    INTERLEAVED (legacy, fused, ... repeated) and best-of-N per engine, so
+    slow drift in background load on a shared host cancels out of the
+    ratios instead of biasing whichever engine ran last."""
+    best = [float("inf")] * len(engines)
+    n = [0] * len(engines)
+    for _ in range(repeats):
+        for i, engine in enumerate(engines):
+            t0 = time.perf_counter()
+            outs = engine.run(reqs, key=key)
+            dt = time.perf_counter() - t0
+            n[i] = sum(len(o) for o in outs)
+            best[i] = min(best[i], dt)
+    return list(zip(n, best))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="short runs (CI): fewer tokens/repeats")
+    ap.add_argument("--full", action="store_true",
+                    help="compute-heavier model (reports speedup without "
+                         "asserting it — it is hardware-dependent there)")
+    ap.add_argument("--out", default="BENCH_serve.json")
+    ap.add_argument("--no-assert", action="store_true",
+                    help="report only; do not enforce speedup/recompiles")
+    args = ap.parse_args()
+
+    from repro import compiler
+    from repro.serve.engine import BatchedEngine, ContinuousEngine
+
+    cfg, model, params = _mk_model(args.full)
+    max_new = 32 if args.smoke else 64
+    batch = 4
+    chunk = 8
+    max_seq = cfg.max_seq
+    reqs = _mk_requests(cfg, batch, 16, max_new)
+    key = jax.random.PRNGKey(7)
+
+    print(f"# serve_bench: {cfg.name} (layers={cfg.n_layers} "
+          f"d={cfg.d_model} vocab={cfg.vocab}) batch={batch} "
+          f"max_new={max_new} chunk={chunk}")
+
+    # -- prefill latency (both drivers' prefill, warm) ------------------------
+    lengths = [int(r.prompt.shape[0]) for r in reqs]
+    s = max(lengths)
+    fused = BatchedEngine(model, params, max_seq=max_seq, chunk=chunk)
+    legacy = LegacyBatchedEngine(model, params, max_seq=max_seq)
+    toks = jnp.stack([fused._pad_prompt(r.prompt, s) for r in reqs])
+
+    def time_prefill(fn, *extra):
+        cache = model.init_cache(batch, max_seq)
+        jax.block_until_ready(fn(params, toks, cache, *extra)[0])
+        best = float("inf")
+        for _ in range(5):                    # best-of-N: loaded-host noise
+            cache = model.init_cache(batch, max_seq)
+            t0 = time.perf_counter()
+            jax.block_until_ready(fn(params, toks, cache, *extra)[0])
+            best = min(best, time.perf_counter() - t0)
+        return best
+
+    prefill_s = time_prefill(fused._prefill, jnp.asarray(lengths))
+    prefill_legacy_s = time_prefill(legacy.prefill_fn)
+    print(f"  prefill     {prefill_s * 1e3:9.2f} ms  (batch={batch}, "
+          f"seq={s}; legacy {prefill_legacy_s * 1e3:.2f} ms)")
+
+    # -- decode throughput: run time minus the engine's own prefill ----------
+    legacy.run(reqs, key=key)                      # warm/compile
+    t0 = time.perf_counter()
+    fused.run(reqs, key=key)                       # warm/compile
+    t_warm = time.perf_counter() - t0
+    (n_leg, t_leg_e2e), (n_fus, t_fus) = _timed_runs([legacy, fused], reqs,
+                                                     key)
+    t_leg = max(t_leg_e2e - prefill_legacy_s, 1e-9)
+    t_fus = max(t_fus - prefill_s, 1e-9)
+    print(f"  legacy      {n_leg / t_leg:9.1f} tok/s   "
+          f"({n_leg} tokens, {t_leg:.2f}s decode, 1 host sync/token)")
+    print(f"  fused       {n_fus / t_fus:9.1f} tok/s   "
+          f"({n_fus} tokens, {t_fus:.2f}s decode, 1 host sync/chunk "
+          f"of {chunk})")
+
+    # -- continuous batching + recompile accounting ---------------------------
+    cont = ContinuousEngine(model, params, max_seq=max_seq, slots=batch,
+                            chunk=chunk)
+    # warm pass over the bucketed shape set: every prompt bucket once
+    warm_reqs = []
+    for b in cont.buckets:
+        if b + max_new <= max_seq:
+            warm_reqs += _mk_requests(cfg, 1, min(b, b - 2) or 1, max_new)
+    cont.run(warm_reqs or reqs, key=key)
+    compiles_warm = cont.decode_cache_misses()
+    prefill_compiles_warm = int(cont._prefill._cache_size())
+
+    [(n_cont, t_cont)] = _timed_runs([cont], reqs, key)
+    compiles_after = cont.decode_cache_misses()
+    prefill_compiles_after = int(cont._prefill._cache_size())
+    recompiles = (compiles_after - compiles_warm) + (
+        prefill_compiles_after - prefill_compiles_warm)
+    # continuous run time includes its per-admission prefills, so its rate
+    # is END-TO-END — compared against legacy end-to-end, not decode-only
+    print(f"  continuous  {n_cont / t_cont:9.1f} tok/s   "
+          f"({n_cont} tokens, {t_cont:.2f}s end-to-end, slots={batch})")
+    print(f"  recompiles after warm-up: {recompiles} "
+          f"(decode {compiles_after - compiles_warm}, "
+          f"prefill {prefill_compiles_after - prefill_compiles_warm})")
+
+    speedup = (n_fus / t_fus) / (n_leg / t_leg)
+    speedup_cont = (n_cont / t_cont) / (n_leg / t_leg_e2e)
+    print(f"  fused/legacy decode speedup          {speedup:6.2f}x")
+    print(f"  continuous/legacy end-to-end speedup {speedup_cont:6.2f}x")
+
+    doc = {
+        "config": {"name": cfg.name, "n_layers": cfg.n_layers,
+                   "d_model": cfg.d_model, "vocab": cfg.vocab,
+                   "batch": batch, "max_new": max_new, "chunk": chunk,
+                   "smoke": bool(args.smoke), "full": bool(args.full)},
+        "prefill": {"latency_ms": prefill_s * 1e3,
+                    "legacy_latency_ms": prefill_legacy_s * 1e3,
+                    "batch": batch, "seq": s},
+        "decode": {
+            "legacy_tok_s": n_leg / t_leg,
+            "fused_tok_s": n_fus / t_fus,
+            "legacy_tok_s_end_to_end": n_leg / t_leg_e2e,
+            "continuous_tok_s_end_to_end": n_cont / t_cont,
+            "speedup_fused_vs_legacy": speedup,
+            "speedup_continuous_vs_legacy_end_to_end": speedup_cont,
+            "fused_warmup_s": t_warm,
+        },
+        "sync": {"legacy_host_syncs_per_token": 1,
+                 "fused_host_syncs_per_step_in_chunk": 0,
+                 "fused_host_syncs_per_chunk": 1, "chunk": chunk},
+        "recompiles": {
+            "decode_compiles_warm": compiles_warm,
+            "decode_recompiles_after_warmup": compiles_after - compiles_warm,
+            "prefill_recompiles_after_warmup":
+                prefill_compiles_after - prefill_compiles_warm,
+            "executor_cache": compiler.executor_cache().stats(),
+        },
+    }
+    with open(args.out, "w") as f:
+        json.dump(doc, f, indent=1, sort_keys=True)
+    print(f"  wrote {args.out}")
+
+    if not args.no_assert:
+        assert recompiles == 0, \
+            f"{recompiles} recompiles after warm-up (want 0)"
+        if not args.full:
+            # the harness-overhead claim; on the --full model the ratio is
+            # compute-bound and hardware-dependent, so it is reported only
+            assert speedup >= 2.0, \
+                f"fused decode {speedup:.2f}x legacy (want >= 2x)"
+        print("  asserts OK (decode speedup, 0 recompiles after warm-up)")
+
+
+if __name__ == "__main__":
+    main()

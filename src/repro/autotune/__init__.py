@@ -21,7 +21,10 @@ them *automatically*.  It generalises the seed's dot-only exhaustive search
 See docs/autotune.md for the cache format and the strategy-space tables.
 """
 from . import api, cache, cost, measure, space  # noqa: F401
-from .api import TuneResult, autotuned, get_tuned, tune, warm_for_model  # noqa: F401
+from .api import (  # noqa: F401
+    TuneResult, autotuned, get_tuned, model_kernel_shapes, tune,
+    warm_for_model,
+)
 from .cache import TuningCache, default_cache  # noqa: F401
 from .cost import CostEstimate, estimate, xla_cost  # noqa: F401
 from .space import Candidate, candidate_from_params, default_params, enumerate_space  # noqa: F401

@@ -231,14 +231,14 @@ def autotuned(kernel: str, *, backend: str = "jnp", cache=None,
     return deco
 
 
-def warm_for_model(cfg, *, max_seq: int = 512, backend: str = "jnp",
-                   cache=None, batch_sizes=(1, 8)
-                   ) -> Dict[str, Dict[str, object]]:
-    """Pre-tune (analytically, cache-backed) the strategy choices a serving
-    engine will need for a model config, at the shapes the ops layer
-    actually keys on: rmsnorm flattens to rows = batch * seq, prefill
-    matmuls run at m = batch * seq, decode matmuls at m = batch.  Returns
-    {cache key: tuned params}; shapes with no valid space are skipped."""
+def model_kernel_shapes(cfg, *, max_seq: int = 512, batch_sizes=(1, 8)
+                        ) -> List[tuple]:
+    """The (kernel, shape) list a serving engine's op dispatch keys on for a
+    model config: rmsnorm flattens to rows = batch * seq, prefill matmuls
+    run at m = batch * seq, decode matmuls at m = batch.  Shared by tuner
+    warm-up (:func:`warm_for_model`) and by the engines' executor/AOT
+    warm-up (``repro.kernels.ops.warm_kernel``), so the two can never drift
+    apart."""
     wants = []
     for b in batch_sizes:
         rows = b * max_seq
@@ -250,8 +250,19 @@ def warm_for_model(cfg, *, max_seq: int = 512, backend: str = "jnp",
             ("matmul", {"m": b, "k": cfg.d_model, "n": cfg.d_ff}),
             ("matmul", {"m": b, "k": cfg.d_model, "n": cfg.d_model}),
         ]
+    return wants
+
+
+def warm_for_model(cfg, *, max_seq: int = 512, backend: str = "jnp",
+                   cache=None, batch_sizes=(1, 8)
+                   ) -> Dict[str, Dict[str, object]]:
+    """Pre-tune (analytically, cache-backed) the strategy choices a serving
+    engine will need for a model config, at the shapes of
+    :func:`model_kernel_shapes`.  Returns {cache key: tuned params}; shapes
+    with no valid space are skipped."""
     out: Dict[str, Dict[str, object]] = {}
-    for kernel, shape in wants:
+    for kernel, shape in model_kernel_shapes(cfg, max_seq=max_seq,
+                                             batch_sizes=batch_sizes):
         try:
             res = tune(kernel, backend=backend, cache=cache, measure=False,
                        **shape)

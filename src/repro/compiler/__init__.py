@@ -39,15 +39,19 @@ from .backends import (  # noqa: F401
     unregister_backend,
 )
 from .options import (  # noqa: F401
-    CompileOptions, current_options, default_options, options,
-    set_default_options,
+    CompileOptions, current_options, default_interpret, default_options,
+    options, set_default_options,
 )
 from .program import CompiledKernel, Program, program  # noqa: F401
+from . import executors, serialize  # noqa: F401
+from .executors import ExecutorCache  # noqa: F401
+from .executors import default_cache as executor_cache  # noqa: F401
 
 __all__ = [
     "Backend", "backend_names", "get_backend", "ops_impls",
     "register_backend", "unregister_backend",
     "CompileOptions", "options", "current_options", "default_options",
-    "set_default_options",
+    "set_default_options", "default_interpret",
     "Program", "CompiledKernel", "program",
+    "ExecutorCache", "executor_cache", "executors", "serialize",
 ]

@@ -28,11 +28,22 @@ from typing import Optional
 from .backends import ops_impls
 
 __all__ = ["CompileOptions", "options", "current_options",
-           "set_default_options", "default_options"]
+           "set_default_options", "default_options", "default_interpret"]
 
 
 def _env_autotune() -> bool:
     return os.environ.get("REPRO_AUTOTUNE", "1") != "0"
+
+
+def default_interpret() -> bool:
+    """Whether Pallas kernels should default to interpret mode here: True
+    only when the host platform is CPU (no Mosaic compiler), False on real
+    accelerators.  ``REPRO_INTERPRET=0|1`` overrides the probe."""
+    env = os.environ.get("REPRO_INTERPRET")
+    if env is not None:
+        return env != "0"
+    import jax
+    return jax.default_backend() == "cpu"
 
 
 @dataclass(frozen=True)
@@ -44,13 +55,14 @@ class CompileOptions:
     autotune      let repro.autotune choose strategy params (default: the
                   REPRO_AUTOTUNE env var, read at import)
     tuning_cache  None (process default cache), a path, or a TuningCache
-    interpret     run Pallas kernels in interpret mode (CPU validation)
+    interpret     run Pallas kernels in interpret mode (default: auto from
+                  the platform — True only on CPU; see default_interpret)
     jit           wrap compiled programs in jax.jit
     """
     backend: str = "xla"
     autotune: bool = field(default_factory=_env_autotune)
     tuning_cache: object = None
-    interpret: bool = True
+    interpret: bool = field(default_factory=default_interpret)
     jit: bool = True
 
     def __post_init__(self):

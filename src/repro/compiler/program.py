@@ -25,6 +25,9 @@ section 3.3 example.
 """
 from __future__ import annotations
 
+import json
+import os
+import tempfile
 from typing import Callable, Dict, List, Optional, Sequence, Union
 
 from repro.core.dpia import check as check_mod
@@ -36,6 +39,8 @@ from .backends import Backend, get_backend
 from .options import CompileOptions, current_options
 
 __all__ = ["Program", "CompiledKernel", "program"]
+
+EXPORT_VERSION = 1
 
 Strategy = Union[None, str, Dict[str, object], Callable[[P.Phrase], P.Phrase]]
 
@@ -228,6 +233,74 @@ class Program:
             import jax
             fn = jax.jit(fn)
         return CompiledKernel(fn, self, b.name)
+
+    # ---- AOT persistence ---------------------------------------------------
+
+    def to_doc(self) -> dict:
+        """JSON-able document of this program's *lowered* form.
+
+        Triggers Stage I->II if the program has not been lowered yet.  The
+        document persists the imperative command (serialised through
+        :mod:`repro.compiler.serialize`), the argument/out Vars, and the
+        kernel/shape metadata — everything a later process needs to jump
+        straight to Stage III."""
+        from . import serialize
+        cmd, out = self._translated()
+        return {
+            "version": EXPORT_VERSION,
+            "name": self.name,
+            "kernel": self.kernel,
+            "shape": dict(self.shape),
+            "args": [serialize.var_to_doc(v) for v in self.arg_vars],
+            "out": serialize.var_to_doc(out),
+            "checked": bool(self._checked),
+            "cmd": serialize.phrase_to_doc(cmd),
+        }
+
+    @classmethod
+    def from_doc(cls, doc: dict) -> "Program":
+        """Rebuild a lowered Program from :meth:`to_doc` output.
+
+        The result is imperative-only (its functional term is gone — the
+        strategy was already fixed before export), so ``compile`` requires a
+        backend that accepts lowered commands (jnp/pallas do).  The persisted
+        ``checked`` bit is trusted: an artefact exported after ``check()``
+        does not re-run the SCIR discipline on load."""
+        from . import serialize
+        if doc.get("version") != EXPORT_VERSION:
+            raise ValueError(f"Program.from_doc: unsupported export version "
+                             f"{doc.get('version')!r}")
+        args = [serialize.var_from_doc(a) for a in doc["args"]]
+        prog = cls(None, args, name=doc.get("name"),
+                   kernel=doc.get("kernel"), shape=doc.get("shape") or {})
+        prog._cmd = serialize.phrase_from_doc(doc["cmd"])
+        prog._out = serialize.var_from_doc(doc["out"])
+        prog._checked = bool(doc.get("checked"))
+        return prog
+
+    def export(self, path: str) -> str:
+        """Write the lowered program to ``path`` (atomic tmp+rename)."""
+        doc = self.to_doc()
+        d = os.path.dirname(path) or "."
+        os.makedirs(d, exist_ok=True)
+        fd, tmp = tempfile.mkstemp(dir=d, prefix=".program-", suffix=".json")
+        try:
+            with os.fdopen(fd, "w") as f:
+                json.dump(doc, f, indent=1, sort_keys=True)
+            os.replace(tmp, path)
+        except OSError:
+            try:
+                os.unlink(tmp)
+            except OSError:
+                pass
+            raise
+        return path
+
+    @classmethod
+    def load(cls, path: str) -> "Program":
+        """Read a program exported with :meth:`export` (skips Stage I->II)."""
+        with open(path) as f:
+            return cls.from_doc(json.load(f))
 
     # ---- sugar -------------------------------------------------------------
 

@@ -10,6 +10,10 @@ triple accumulator in DPIA vocabulary (DESIGN.md section 5).
 Causal masking compares absolute positions, with ``q_offset`` allowing the
 query block to live anywhere in the kv sequence (prefill continuation).
 Validated against ref.flash_attention in interpret mode.
+
+``interpret`` defaults to None = auto: interpret mode only on CPU hosts
+(where there is no Mosaic compiler), native compilation on real
+accelerators.  Pass an explicit bool to override (tests pin it).
 """
 from __future__ import annotations
 
@@ -18,6 +22,8 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+
+from repro.compiler.options import default_interpret
 
 NEG_INF = -1e30
 
@@ -66,7 +72,9 @@ def _fa_kernel(q_ref, k_ref, v_ref, o_ref, *, bk: int, sk: int, scale: float,
     "causal", "bq", "bk", "interpret", "q_offset", "scale"))
 def flash_attention(q, k, v, *, causal: bool = True, scale: float | None = None,
                     q_offset: int = 0, bq: int = 128, bk: int = 128,
-                    interpret: bool = True):
+                    interpret: bool | None = None):
+    if interpret is None:
+        interpret = default_interpret()   # True only on CPU platforms
     bh, sq, d = q.shape
     bkv, sk, dv = k.shape
     assert bh % bkv == 0 and dv == d

@@ -38,8 +38,13 @@ def _matmul_kernel(a_ref, b_ref, o_ref, acc_ref, *, n_k: int):
 @functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "interpret",
                                              "out_dtype"))
 def matmul(a, b, *, bm: int = 128, bn: int = 128, bk: int = 128,
-           interpret: bool = True, out_dtype=None):
-    """C = A @ B with (bm, bn, bk) MXU tiling."""
+           interpret: bool | None = None, out_dtype=None):
+    """C = A @ B with (bm, bn, bk) MXU tiling.
+
+    ``interpret=None`` auto-selects: interpret mode only on CPU hosts."""
+    if interpret is None:
+        from repro.compiler.options import default_interpret
+        interpret = default_interpret()
     m, k = a.shape
     k2, n = b.shape
     assert k == k2, (a.shape, b.shape)

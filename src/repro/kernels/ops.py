@@ -34,6 +34,7 @@ import jax.numpy as jnp
 
 from repro import compiler
 from repro.compiler import CompileOptions, current_options
+from repro.compiler import executors as _executors
 
 from . import dpia_blas, ref
 from .flash_attention import flash_attention as _fa_pallas
@@ -79,18 +80,17 @@ def _dpia_backend(impl: str) -> str:
 
 
 # ---------------------------------------------------------------------------
-# compiled-Program cache + tuned-params lookup
+# compiled-executor cache + tuned-params lookup
 # ---------------------------------------------------------------------------
 
-_PROGRAMS: Dict[Tuple, compiler.CompiledKernel] = {}
 _tuned_memo: Dict[Tuple, Optional[dict]] = {}
 _warned: set = set()
 _LOCK = threading.Lock()
 
 
 def clear_caches() -> None:
-    """Drop compiled-program/tuned-params memos (and one-shot warn state)."""
-    _PROGRAMS.clear()
+    """Drop compiled-executor/tuned-params memos (and one-shot warn state)."""
+    compiler.executor_cache().clear()
     _tuned_memo.clear()
     _warned.clear()
 
@@ -139,19 +139,28 @@ def _tuned(kernel: str, backend: str, opts: CompileOptions,
     return params
 
 
-def _compiled(key: Tuple, builder, backend: str,
+def _compiled(kernel: str, shape: Dict[str, int],
+              params: Optional[Dict[str, object]], builder, backend: str,
               opts: CompileOptions) -> compiler.CompiledKernel:
-    """Build-and-memoise ``Program.check().lower().compile(backend)``.
+    """Build-and-memoise ``Program.check().lower().compile(backend)`` in the
+    process-wide executor cache (``repro.compiler.executor_cache``).
 
-    Two threads racing on a cold key may both compile; ``setdefault`` keeps
-    exactly one result (dict ops are atomic under the GIL)."""
-    k = key + (backend, bool(opts.interpret), bool(opts.jit))
-    fn = _PROGRAMS.get(k)
-    if fn is None:
-        prog = compiler.Program.from_builder(builder, name=str(key[0]))
-        fn = _PROGRAMS.setdefault(
-            k, prog.check().lower().compile(backend, options=opts))
-    return fn
+    Steady state is one dict lookup on the canonical
+    ``(kernel, shape, dtype, backend, params, options)`` key — the staged
+    pipeline runs at most once per key per process, and a key pre-populated
+    from the AOT store never stages at all."""
+    key = _executors.make_key(kernel, shape, backend, params=params,
+                              interpret=bool(opts.interpret),
+                              jit=bool(opts.jit))
+
+    def build():
+        prog = compiler.Program.from_builder(
+            builder, name=kernel, kernel=kernel, shape=shape)
+        return prog.check().lower().compile(backend, options=opts)
+
+    return compiler.executor_cache().get_or_compile(
+        key, build, meta={"interpret": bool(opts.interpret),
+                          "jit": bool(opts.jit)})
 
 
 def _default_params(kernel: str, **shape) -> Dict[str, object]:
@@ -172,9 +181,7 @@ def _tuned_or_default(kernel: str, backend: str, opts: CompileOptions,
             from repro.autotune import space as _sp
             return _sp.candidate_from_params(kernel, params, **shape).build()
         try:
-            return _compiled(
-                (kernel, tuple(sorted(shape.items())),
-                 tuple(sorted(params.items()))), build, backend, opts)
+            return _compiled(kernel, shape, params, build, backend, opts)
         except Exception as e:  # malformed cache params: use the default
             _warn_once(("params", kernel, backend),
                        f"tuned params {params!r} for {kernel!r} (backend "
@@ -186,9 +193,37 @@ def _tuned_or_default(kernel: str, backend: str, opts: CompileOptions,
         from repro.autotune import space as _sp
         return _sp.candidate_from_params(
             kernel, _default_params(kernel, **shape), **shape).build()
-    # default params are a pure function of the shape, so "default" keys them
-    return _compiled((kernel, tuple(sorted(shape.items())), "default"),
-                     build_default, backend, opts)
+    # default params are a pure function of the shape, so params=None ("the
+    # default point") keys them
+    return _compiled(kernel, shape, None, build_default, backend, opts)
+
+
+# ---------------------------------------------------------------------------
+# warm-up: stage the executors a serving engine will hit, without running them
+# ---------------------------------------------------------------------------
+
+def warm_kernel(kernel: str, *, backend: str | None = None,
+                options: CompileOptions | None = None,
+                **shape) -> compiler.CompiledKernel:
+    """Stage+compile (lazily jitted, never executed) the executor the DPIA
+    dispatch path would build for ``kernel`` at ``shape`` — exactly the same
+    cache key the runtime handlers use, so a warmed executor is a guaranteed
+    dispatch hit.  Serving engines call this at start-up and then persist
+    the result with ``repro.compiler.executor_cache().save_aot(dir)``."""
+    opts = options if options is not None else current_options()
+    b = backend or opts.dpia_backend
+    if kernel in ("dot", "asum", "scal"):
+        return _tuned_or_default(kernel, b, opts, dict(shape))
+    if kernel == "gemv":
+        return _gemv_compiled(b, opts, shape["m"], shape["n"])
+    if kernel == "matmul":
+        return _matmul_compiled(b, opts, shape["m"], shape["k"], shape["n"])
+    if kernel == "rmsnorm":
+        return _rmsnorm_compiled(b, opts, shape["rows"], shape["d"],
+                                 shape.get("eps", 1e-6))
+    if kernel == "softmax":
+        return _softmax_compiled(b, opts, shape["rows"], shape["d"])
+    raise ValueError(f"warm_kernel: unknown kernel {kernel!r}")
 
 
 # ---------------------------------------------------------------------------
@@ -290,12 +325,15 @@ def _gemv_ref(impl, opts, a, x):
     return ref.gemv(a, x)
 
 
+def _gemv_compiled(backend: str, opts: CompileOptions, m: int, n: int):
+    # gemv has no autotune space yet; always the default row-blocked strategy
+    return _compiled("gemv", dict(m=m, n=n), None,
+                     lambda: dpia_blas.strategy_gemv(m, n), backend, opts)
+
+
 @_impl_handler("gemv", "dpia-jnp", "dpia-pallas")
 def _gemv_dpia(impl, opts, a, x):
-    # gemv has no autotune space yet; always the default row-blocked strategy
-    fn = _compiled(("gemv", a.shape),
-                   lambda: dpia_blas.strategy_gemv(*a.shape),
-                   _dpia_backend(impl), opts)
+    fn = _gemv_compiled(_dpia_backend(impl), opts, *a.shape)
     return fn(a, x)
 
 
@@ -316,11 +354,8 @@ def _matmul_pallas(impl, opts, a, b, out_dtype=None):
     return _mm_pallas(a, b, out_dtype=out_dtype)
 
 
-@_impl_handler("matmul", "dpia-jnp", "dpia-pallas")
-def _matmul_dpia(impl, opts, a, b, out_dtype=None):
-    backend = _dpia_backend(impl)
-    m, k = a.shape
-    n = b.shape[1]
+def _matmul_compiled(backend: str, opts: CompileOptions, m: int, k: int,
+                     n: int):
     params = _tuned("matmul", backend, opts, m=m, k=k, n=n) or {}
     defaults = _default_params("matmul", m=m, k=k, n=n)
     bm, bk = params.get("bm"), params.get("bk")
@@ -328,10 +363,16 @@ def _matmul_dpia(impl, opts, a, b, out_dtype=None):
         bm = defaults["bm"]  # malformed/hand-edited cache entry
     if not (isinstance(bk, int) and bk > 0 and k % bk == 0):
         bk = defaults["bk"]
-    fn = _compiled(
-        ("matmul", a.shape, b.shape, bm, bk),
+    return _compiled(
+        "matmul", dict(m=m, k=k, n=n), dict(bm=bm, bk=bk),
         lambda: dpia_blas.strategy_matmul(m, k, n, bm=bm, bk=bk),
         backend, opts)
+
+
+@_impl_handler("matmul", "dpia-jnp", "dpia-pallas")
+def _matmul_dpia(impl, opts, a, b, out_dtype=None):
+    m, k = a.shape
+    fn = _matmul_compiled(_dpia_backend(impl), opts, m, k, b.shape[1])
     return fn(a, b).astype(out_dtype or a.dtype)
 
 
@@ -350,22 +391,25 @@ def _rmsnorm_pallas(impl, opts, x, w, eps=1e-6):
     return _rms_pallas(x, w, eps=eps)
 
 
-@_impl_handler("rmsnorm", "dpia-jnp", "dpia-pallas")
-def _rmsnorm_dpia(impl, opts, x, w, eps=1e-6):
-    backend = _dpia_backend(impl)
-    d = x.shape[-1]
-    x2 = x.reshape(-1, d)
-    rows = x2.shape[0]
+def _rmsnorm_compiled(backend: str, opts: CompileOptions, rows: int, d: int,
+                      eps: float = 1e-6):
     params = _tuned("rmsnorm", backend, opts, rows=rows, d=d) or {}
     rb = params.get("row_block")
     if not (isinstance(rb, int) and rb > 0 and rows % rb == 0):
         # malformed/missing cache entry; eps is threaded separately, so the
         # builder below stays direct and only the params value is shared
         rb = _default_params("rmsnorm", rows=rows, d=d)["row_block"]
-    fn = _compiled(
-        ("rmsnorm", x2.shape, rb, eps),
+    return _compiled(
+        "rmsnorm", dict(rows=rows, d=d), dict(row_block=rb, eps=eps),
         lambda: dpia_blas.strategy_rmsnorm(rows, d, eps, row_block=rb),
         backend, opts)
+
+
+@_impl_handler("rmsnorm", "dpia-jnp", "dpia-pallas")
+def _rmsnorm_dpia(impl, opts, x, w, eps=1e-6):
+    d = x.shape[-1]
+    x2 = x.reshape(-1, d)
+    fn = _rmsnorm_compiled(_dpia_backend(impl), opts, x2.shape[0], d, eps)
     return fn(x2.astype(jnp.float32),
               w.astype(jnp.float32)).reshape(x.shape).astype(x.dtype)
 
@@ -380,22 +424,24 @@ def _softmax_ref(impl, opts, x, axis=-1):
     return ref.softmax(x, axis=axis)
 
 
-@_impl_handler("softmax", "dpia-jnp", "dpia-pallas")
-def _softmax_dpia(impl, opts, x, axis=-1):
-    if x.ndim < 2 or axis not in (-1, x.ndim - 1):
-        return ref.softmax(x, axis=axis)  # DPIA path covers row softmax only
-    backend = _dpia_backend(impl)
-    d = x.shape[-1]
-    x2 = x.reshape(-1, d)
-    rows = x2.shape[0]
+def _softmax_compiled(backend: str, opts: CompileOptions, rows: int, d: int):
     params = _tuned("softmax", backend, opts, rows=rows, d=d) or {}
     rb = params.get("row_block")
     if not (isinstance(rb, int) and rb > 0 and rows % rb == 0):
         rb = _default_params("softmax", rows=rows, d=d)["row_block"]
-    fn = _compiled(
-        ("softmax", x2.shape, rb),
+    return _compiled(
+        "softmax", dict(rows=rows, d=d), dict(row_block=rb),
         lambda: dpia_blas.strategy_softmax(rows, d, row_block=rb),
         backend, opts)
+
+
+@_impl_handler("softmax", "dpia-jnp", "dpia-pallas")
+def _softmax_dpia(impl, opts, x, axis=-1):
+    if x.ndim < 2 or axis not in (-1, x.ndim - 1):
+        return ref.softmax(x, axis=axis)  # DPIA path covers row softmax only
+    d = x.shape[-1]
+    x2 = x.reshape(-1, d)
+    fn = _softmax_compiled(_dpia_backend(impl), opts, x2.shape[0], d)
     return fn(x2.astype(jnp.float32)).reshape(x.shape).astype(x.dtype)
 
 

@@ -19,7 +19,11 @@ def _rmsnorm_kernel(x_ref, w_ref, o_ref, *, eps: float):
 
 @functools.partial(jax.jit, static_argnames=("eps", "block_rows", "interpret"))
 def rmsnorm(x, w, *, eps: float = 1e-6, block_rows: int = 256,
-            interpret: bool = True):
+            interpret: bool | None = None):
+    # interpret=None auto-selects: interpret mode only on CPU hosts
+    if interpret is None:
+        from repro.compiler.options import default_interpret
+        interpret = default_interpret()
     orig_shape = x.shape
     d = x.shape[-1]
     x2 = x.reshape(-1, d)

@@ -1,7 +1,8 @@
 """Serving launcher: ``python -m repro.launch.serve --arch <id> --smoke``.
 
 Initialises a model, prefills a batch of prompts, and decodes with the
-batched engine (greedy or sampled)."""
+batched or continuous-batching engine (greedy or sampled) over the fused
+on-device decode chunks."""
 from __future__ import annotations
 
 import argparse
@@ -12,7 +13,13 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
     ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--engine", choices=("static", "continuous"),
+                    default="static")
     ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--slots", type=int, default=4,
+                    help="device decode lanes (continuous engine)")
+    ap.add_argument("--chunk", type=int, default=8,
+                    help="decode tokens per fused on-device chunk")
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--temperature", type=float, default=0.0)
@@ -23,7 +30,7 @@ def main() -> None:
 
     from repro.configs import config, smoke_config
     from repro.models.transformer import Model
-    from repro.serve.engine import BatchedEngine, Request
+    from repro.serve.engine import BatchedEngine, ContinuousEngine, Request
 
     cfg = smoke_config(args.arch) if args.smoke else config(args.arch)
     model = Model(cfg)
@@ -38,8 +45,13 @@ def main() -> None:
     reqs = [Request(prompt=p, max_new_tokens=args.max_new,
                     temperature=args.temperature) for p in prompts]
 
-    engine = BatchedEngine(model, params,
-                           max_seq=args.prompt_len + args.max_new + 8)
+    max_seq = args.prompt_len + args.max_new + 8
+    if args.engine == "continuous":
+        engine = ContinuousEngine(model, params, max_seq=max_seq,
+                                  slots=args.slots, chunk=args.chunk)
+    else:
+        engine = BatchedEngine(model, params, max_seq=max_seq,
+                               chunk=args.chunk)
     t0 = time.time()
     outs = engine.run(reqs)
     dt = time.time() - t0

@@ -189,16 +189,30 @@ def attention_decode_inplace(p: AttnParams, cfg: ModelConfig, x, ck, cv,
     of cache-write traffic at 500k context (EXPERIMENTS.md Perf, zamba2).
 
     ck/cv: (L, b, max_seq, nkv, hd); li: layer index; returns (out, ck, cv).
+
+    ``pos`` is a scalar (lock-step batch, every slot at the same position)
+    or a (b,) vector (continuous batching: each slot decodes at its own
+    position).  The vector path writes the token via a per-slot scatter
+    (mode='drop': a slot whose position has run past max_seq writes nothing
+    instead of corrupting a neighbour) and masks attention per slot.
     """
     b, _, d = x.shape
     nh, nkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
-    positions = pos + jnp.zeros((b, 1), jnp.int32)
+    pos = jnp.asarray(pos, jnp.int32)
+    per_slot = pos.ndim == 1
+    positions = pos[:, None] if per_slot else pos + jnp.zeros((b, 1),
+                                                              jnp.int32)
     q, k, v = _project_qkv(p, cfg, x, positions)
-    zero = jnp.zeros((), jnp.int32)
-    ck = jax.lax.dynamic_update_slice(ck, k[None].astype(ck.dtype),
-                                      (li, zero, pos, zero, zero))
-    cv = jax.lax.dynamic_update_slice(cv, v[None].astype(cv.dtype),
-                                      (li, zero, pos, zero, zero))
+    if per_slot:
+        slots = jnp.arange(b)
+        ck = ck.at[li, slots, pos].set(k[:, 0].astype(ck.dtype), mode="drop")
+        cv = cv.at[li, slots, pos].set(v[:, 0].astype(cv.dtype), mode="drop")
+    else:
+        zero = jnp.zeros((), jnp.int32)
+        ck = jax.lax.dynamic_update_slice(ck, k[None].astype(ck.dtype),
+                                          (li, zero, pos, zero, zero))
+        cv = jax.lax.dynamic_update_slice(cv, v[None].astype(cv.dtype),
+                                          (li, zero, pos, zero, zero))
     k_l = jax.lax.dynamic_index_in_dim(ck, li, axis=0, keepdims=False)
     v_l = jax.lax.dynamic_index_in_dim(cv, li, axis=0, keepdims=False)
     group = nh // nkv
@@ -207,7 +221,8 @@ def attention_decode_inplace(p: AttnParams, cfg: ModelConfig, x, ck, cv,
                         preferred_element_type=jnp.float32) \
         / jnp.sqrt(float(hd))
     t = k_l.shape[1]
-    valid = jnp.arange(t)[None, None, None, :] <= pos
+    kpos = jnp.arange(t)[None, None, None, :]
+    valid = kpos <= (pos[:, None, None, None] if per_slot else pos)
     scores = jnp.where(valid, scores, -jnp.inf)
     probs = jax.nn.softmax(scores, axis=-1)
     out = jnp.einsum("bngt,btnh->bngh", probs.astype(v_l.dtype), v_l,

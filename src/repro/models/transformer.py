@@ -251,8 +251,15 @@ class Model:
         return jax.tree_util.tree_map(
             lambda l: jnp.broadcast_to(l, (cfg.n_layers,) + l.shape), kv)
 
-    def prefill(self, params, tokens, cache, start: int = 0):
-        """Fill the cache with ``tokens``; returns (last_logits, cache)."""
+    def prefill(self, params, tokens, cache, start: int = 0, lengths=None):
+        """Fill the cache with ``tokens``; returns (last_logits, cache).
+
+        ``lengths`` ((b,) int32) marks the real prompt length per row for
+        RIGHT-padded batches: logits are gathered at ``lengths - 1`` instead
+        of the final position, so bucket padding on the right never leaks
+        into the returned next-token distribution (for attention families a
+        right-padded prefill is bitwise the unpadded computation — causal
+        masking means real tokens never attend to the padding)."""
         cfg = self.cfg
         x = self.embed(params, tokens)
         b, s = x.shape[:2]
@@ -310,11 +317,21 @@ class Model:
                 (params["blocks"], cache))
 
         x = rmsnorm(x, params["ln_f"], cfg.norm_eps)
-        logits = jnp.einsum("bd,dv->bv", x[:, -1], params["head"])
+        if lengths is None:
+            x_last = x[:, -1]
+        else:
+            idx = jnp.clip(jnp.asarray(lengths, jnp.int32) - 1, 0, s - 1)
+            x_last = jnp.take_along_axis(
+                x, idx[:, None, None], axis=1)[:, 0]
+        logits = jnp.einsum("bd,dv->bv", x_last, params["head"])
         return logits, new_cache
 
     def decode_step(self, params, token, cache, pos):
-        """token: (b, 1[, K]) -> (logits (b, vocab), new cache)."""
+        """token: (b, 1[, K]) -> (logits (b, vocab), new cache).
+
+        ``pos`` is a scalar (lock-step batch) or a (b,) per-slot position
+        vector (continuous batching) — threaded through to
+        ``attention_decode_inplace``; recurrent families ignore it."""
         cfg = self.cfg
         x = self.embed(params, token)
         b = x.shape[0]

@@ -1,39 +1,68 @@
-"""Serving: jitted prefill/decode steps with KV-cache sharding + a simple
-continuous-batching engine (the 'serve a small model with batched requests'
-driver used by examples/serve_lm.py).
+"""Serving engines: the decode fast path.
+
+The decode hot loop runs entirely on device: a jitted ``lax.scan`` advances
+``chunk`` tokens per call with sampling (per-request temperature + top-k)
+fused into the step, the KV cache and the token/position/key buffers donated
+(``donate_argnums``) so decode is copy-free, and the host syncs exactly once
+per chunk — it reads the ``(batch, chunk)`` token block after the scan, never
+an individual token.
+
+Two engines share that core:
+
+  * :class:`BatchedEngine` — static batch: prefill all requests together,
+    decode lock-step until every request has its tokens (the oracle the
+    continuous engine is tested against).
+  * :class:`ContinuousEngine` — continuous batching over a fixed number of
+    device slots: requests are admitted into free slots and retired at chunk
+    boundaries (:mod:`repro.serve.scheduler`), prompts are right-padded to
+    power-of-two buckets and the decode batch is always ``slots`` wide, so
+    jit sees a small closed set of shapes — zero recompiles after one pass
+    over the buckets.
+
+Sampling determinism: each request's PRNG stream is
+``fold_in(run_key, request_index)`` advanced once per sampled token, so the
+tokens a request receives are a function of the request alone — independent
+of which other requests share the batch, of slot assignment, and of chunk
+size.  That is what makes continuous-batching output token-identical to the
+static oracle.
+
+Engines with a ``tuning_cache`` pre-tune the strategy autotuner for the
+model's kernel shapes at build time, stage the corresponding executors, and
+persist them ahead-of-time next to the tuning cache
+(``repro.compiler.executor_cache().save_aot``) — a restarted engine loads
+the lowered programs and skips Stage I->II entirely.  ``run`` scopes the
+``repro.kernels.ops`` dispatch to that cache thread-locally via
+``repro.compiler.options(tuning_cache=...)``.
 """
 from __future__ import annotations
 
 import contextlib
 import dataclasses
+import os
 from typing import Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import Mesh, PartitionSpec as PS
+import numpy as np
 
 from repro.models.transformer import Model
-from repro.sharding import rules
+from repro.serve.scheduler import Scheduler, pick_bucket, seq_buckets
+
+__all__ = ["Request", "BatchedEngine", "ContinuousEngine", "sample",
+           "sample_tokens"]
 
 
-def make_serve_fns(model: Model, mesh: Optional[Mesh] = None):
-    """Returns (prefill_fn, decode_fn), jitted; sharded when mesh given."""
-    cfg = model.cfg
-
-    def prefill(params, tokens, cache):
-        return model.prefill(params, tokens, cache)
-
-    def decode(params, token, cache, pos):
-        logits, cache = model.decode_step(params, token, cache, pos)
-        return logits, cache
-
-    if mesh is None:
-        return jax.jit(prefill), jax.jit(decode)
-
-    return jax.jit(prefill), jax.jit(decode)
-
+# ---------------------------------------------------------------------------
+# sampling
+# ---------------------------------------------------------------------------
 
 def sample(logits, key, *, temperature: float = 0.0, top_k: int = 0):
+    """Single-temperature sampling (whole batch shares the knobs).
+
+    ``temperature <= 0`` is greedy argmax.  ``top_k > 0`` keeps the k
+    largest logits per row; values tied with the k-th largest are all kept
+    (the cutoff is a >=-threshold, not a count), and ``top_k >= vocab`` is a
+    no-op."""
     if temperature <= 0.0:
         return jnp.argmax(logits, axis=-1)
     logits = logits / temperature
@@ -43,42 +72,152 @@ def sample(logits, key, *, temperature: float = 0.0, top_k: int = 0):
     return jax.random.categorical(key, logits, axis=-1)
 
 
+def sample_tokens(logits, keys, temps, top_ks):
+    """Per-request sampling, vectorised over the batch — the form fused into
+    the decode chunk.
+
+    logits (b, vocab) f32; keys (b, 2) per-slot PRNG keys; temps (b,) f32
+    (``<= 0`` means greedy for that row); top_ks (b,) int32 (``0`` means no
+    top-k filter).  Same per-row semantics as :func:`sample`.
+
+    The expensive paths are gated on runtime predicates (``lax.cond``), so
+    an all-greedy batch pays an argmax and nothing else — no full-vocab
+    sort, no gumbel draw — even though the same compiled chunk serves every
+    temperature mix."""
+    vocab = logits.shape[-1]
+    greedy = jnp.argmax(logits, axis=-1)
+
+    def with_topk(scaled):
+        desc = jnp.sort(scaled, axis=-1)[:, ::-1]
+        k = jnp.clip(jnp.where(top_ks > 0, top_ks, vocab), 1, vocab)
+        kth = jnp.take_along_axis(desc, (k - 1)[:, None], axis=-1)
+        return jnp.where(scaled < kth, -jnp.inf, scaled)
+
+    def sampled(_):
+        t = jnp.maximum(temps, 1e-6)[:, None]
+        scaled = logits / t
+        masked = jax.lax.cond(jnp.any((top_ks > 0) & (temps > 0.0)),
+                              with_topk, lambda s: s, scaled)
+        return jax.vmap(lambda kk, row: jax.random.categorical(kk, row))(
+            keys, masked)
+
+    toks = jax.lax.cond(jnp.any(temps > 0.0), sampled,
+                        lambda _: greedy, None)
+    return jnp.where(temps <= 0.0, greedy, toks).astype(jnp.int32)
+
+
+def _split_keys(keys):
+    """Advance a (b, 2) batch of PRNG keys one step: (carry, subkeys)."""
+    pairs = jax.vmap(lambda k: jax.random.split(k))(keys)
+    return pairs[:, 0], pairs[:, 1]
+
+
+# ---------------------------------------------------------------------------
+# requests
+# ---------------------------------------------------------------------------
+
 @dataclasses.dataclass
 class Request:
     prompt: jnp.ndarray          # (s,) or (s, K)
     max_new_tokens: int = 32
     temperature: float = 0.0
+    top_k: int = 0
     out_tokens: Optional[List[int]] = None
 
 
-class BatchedEngine:
-    """Static-batch serving engine: prefill a batch of requests, then decode
-    lock-step until every request finishes (max_new_tokens).
+# ---------------------------------------------------------------------------
+# shared engine core
+# ---------------------------------------------------------------------------
 
-    ``tuning_cache`` (a path or repro.autotune.TuningCache) pre-tunes the
-    strategy autotuner for this model's kernel shapes (prefill and decode,
-    for ``batch_sizes``) at engine build time, and ``run`` scopes the
-    ``repro.kernels.ops`` DPIA dispatch to that cache via
-    ``repro.compiler.options(tuning_cache=...)`` — thread-local, per-engine,
-    so concurrent engines with different caches no longer race on a process
-    global.  A tuner disabled via ``REPRO_AUTOTUNE=0`` or the enclosing
-    options scope stays disabled.  Shapes outside the warmed set cost one
-    cheap analytic ranking pass on first sight; the warmed params are kept
-    in ``self.tuned``."""
+class _EngineBase:
+    """Model/params + the jitted fast-path functions + tuner/AOT warm-up."""
 
-    def __init__(self, model: Model, params, max_seq: int = 512,
-                 tuning_cache=None, batch_sizes=(1, 8)):
+    def __init__(self, model: Model, params, *, max_seq: int, chunk: int,
+                 tuning_cache=None, batch_sizes=(1, 8), aot="auto"):
+        if chunk < 1:
+            raise ValueError(f"chunk must be >= 1, got {chunk}")
         self.model = model
         self.params = params
         self.max_seq = max_seq
+        self.chunk = chunk
         self.tuning_cache = tuning_cache
         self.tuned: Dict[str, dict] = {}
         if tuning_cache is not None:
-            from repro import autotune
-            self.tuned = autotune.warm_for_model(
-                model.cfg, max_seq=max_seq, cache=tuning_cache,
-                batch_sizes=batch_sizes)
-        self.prefill_fn, self.decode_fn = make_serve_fns(model)
+            self._warm(batch_sizes, aot)
+        self._prefill = jax.jit(
+            lambda params, tokens, cache, lengths:
+            model.prefill(params, tokens, cache, lengths=lengths))
+        self._sample0 = jax.jit(sample_tokens)
+        self._chunk_fn = self._make_chunk_fn()
+
+    # -- fused decode chunk --------------------------------------------------
+
+    def _make_chunk_fn(self):
+        model, cfg, max_seq = self.model, self.model.cfg, self.max_seq
+
+        def chunk_fn(params, cache, tokens, pos, keys, temps, top_ks):
+            def step(carry, _):
+                tokens, cache, pos, keys = carry
+                tok = tokens[:, None]
+                if cfg.n_codebooks:
+                    tok = jnp.broadcast_to(
+                        tok[..., None],
+                        (tok.shape[0], 1, cfg.n_codebooks))
+                logits, cache = model.decode_step(params, tok, cache, pos)
+                keys, sub = _split_keys(keys)
+                nxt = sample_tokens(logits, sub, temps, top_ks)
+                # clamp: a retired slot keeps decoding until the boundary;
+                # past max_seq its (per-slot-path) cache writes are dropped
+                pos = jnp.minimum(pos + 1, max_seq)
+                return (nxt, cache, pos, keys), nxt
+
+            (tokens, cache, pos, keys), toks = jax.lax.scan(
+                step, (tokens, cache, pos, keys), None, length=self.chunk)
+            return cache, tokens, pos, keys, toks.T  # toks: (b, chunk)
+
+        # cache + token/pos/key buffers are donated: decode is copy-free and
+        # the engine rebinds the returned buffers each chunk
+        return jax.jit(chunk_fn, donate_argnums=(1, 2, 3, 4))
+
+    def decode_cache_misses(self) -> int:
+        """Number of XLA compilations of the fused decode chunk so far (the
+        'recompile count' the serving benchmark and tests watch)."""
+        return int(self._chunk_fn._cache_size())
+
+    # -- autotune + AOT warm-up ----------------------------------------------
+
+    def _aot_dir(self, aot) -> Optional[str]:
+        if aot is None or aot is False:
+            return None
+        if isinstance(aot, str) and aot != "auto":
+            return aot
+        path = getattr(self.tuning_cache, "path", None) or (
+            self.tuning_cache if isinstance(self.tuning_cache, str) else None)
+        return (str(path) + ".aot") if path else None
+
+    def _warm(self, batch_sizes, aot) -> None:
+        from repro import autotune, compiler
+        from repro.kernels import ops
+        cfg = self.model.cfg
+        self.tuned = autotune.warm_for_model(
+            cfg, max_seq=self.max_seq, cache=self.tuning_cache,
+            batch_sizes=batch_sizes)
+        aot_dir = self._aot_dir(aot)
+        if aot_dir is None:
+            return
+        store = compiler.executor_cache()
+        store.load_aot(aot_dir)  # a prior engine's programs: skip staging
+        before = set(store.keys())
+        with self._options_scope():
+            for kernel, shape in autotune.model_kernel_shapes(
+                    cfg, max_seq=self.max_seq, batch_sizes=batch_sizes):
+                try:
+                    ops.warm_kernel(kernel, **shape)
+                except (ValueError, AssertionError):
+                    continue  # shape with no valid strategy space
+        # export only the keys THIS engine staged — a shared process cache
+        # must not leak another model's programs into this AOT directory
+        store.save_aot(aot_dir, keys=set(store.keys()) - before)
 
     def _options_scope(self):
         """The compile-options scope this engine's kernels run under."""
@@ -87,6 +226,51 @@ class BatchedEngine:
             return contextlib.nullcontext()
         return compiler.options(tuning_cache=self.tuning_cache)
 
+    # -- shared pieces -------------------------------------------------------
+
+    def _pad_prompt(self, prompt, to: int):
+        """RIGHT-pad a (s[, K]) prompt with token 0 to length ``to``."""
+        pad_n = to - prompt.shape[0]
+        return jnp.pad(prompt, [(0, pad_n)] + [(0, 0)] * (prompt.ndim - 1))
+
+    def _check_request(self, r: Request) -> None:
+        need = int(r.prompt.shape[0]) + max(int(r.max_new_tokens), 0)
+        if need > self.max_seq:
+            raise ValueError(
+                f"request needs {need} cache positions (prompt "
+                f"{int(r.prompt.shape[0])} + {r.max_new_tokens} new) but "
+                f"max_seq is {self.max_seq}")
+
+
+# ---------------------------------------------------------------------------
+# static batch (the oracle)
+# ---------------------------------------------------------------------------
+
+class BatchedEngine(_EngineBase):
+    """Static-batch serving engine: prefill a batch of requests together,
+    then decode lock-step in fused on-device chunks until every request has
+    its ``max_new_tokens``.
+
+    Each request is sampled with its *own* temperature/top-k (fixing the
+    seed bug where the whole batch ran at ``requests[0].temperature``).
+    Prompts are right-padded to the batch max; ``prefill(lengths=...)``
+    gathers each row's real next-token logits, so padding never distorts
+    positions or outputs.
+
+    ``tuning_cache`` (a path or repro.autotune.TuningCache) pre-tunes the
+    strategy autotuner for this model's kernel shapes at engine build time,
+    stages the matching executors, and persists them AOT next to the cache;
+    ``run`` scopes the ``repro.kernels.ops`` DPIA dispatch to that cache via
+    ``repro.compiler.options(tuning_cache=...)`` — thread-local, per-engine.
+    """
+
+    def __init__(self, model: Model, params, max_seq: int = 512,
+                 tuning_cache=None, batch_sizes=(1, 8), chunk: int = 8,
+                 aot="auto"):
+        super().__init__(model, params, max_seq=max_seq, chunk=chunk,
+                         tuning_cache=tuning_cache, batch_sizes=batch_sizes,
+                         aot=aot)
+
     def run(self, requests: List[Request], key=None) -> List[List[int]]:
         with self._options_scope():
             return self._run(requests, key)
@@ -94,32 +278,195 @@ class BatchedEngine:
     def _run(self, requests: List[Request], key=None) -> List[List[int]]:
         cfg = self.model.cfg
         key = key if key is not None else jax.random.PRNGKey(0)
+        for r in requests:
+            self._check_request(r)
         b = len(requests)
-        s = max(int(r.prompt.shape[0]) for r in requests)
-        # left-pad prompts to a common length with token 0
-        def pad(p):
-            pad_n = s - p.shape[0]
-            return jnp.pad(p, [(pad_n, 0)] + [(0, 0)] * (p.ndim - 1))
-        tokens = jnp.stack([pad(r.prompt) for r in requests])
+        lengths = [int(r.prompt.shape[0]) for r in requests]
+        s = max(lengths)
+        tokens = jnp.stack([self._pad_prompt(r.prompt, s) for r in requests])
         cache = self.model.init_cache(b, self.max_seq)
-        logits, cache = self.prefill_fn(self.params, tokens, cache)
+        logits, cache = self._prefill(self.params, tokens, cache,
+                                      jnp.asarray(lengths, jnp.int32))
 
-        max_new = max(r.max_new_tokens for r in requests)
-        outs = [[] for _ in requests]
-        pos = s
-        token = None
-        for step in range(max_new):
-            key, sub = jax.random.split(key)
-            temp = requests[0].temperature
-            nxt = sample(logits, sub, temperature=temp)        # (b,)
-            for i, r in enumerate(requests):
-                if step < r.max_new_tokens:
-                    outs[i].append(int(nxt[i]))
-            tok = nxt[:, None]
-            if cfg.n_codebooks:
-                tok = jnp.broadcast_to(tok[..., None],
-                                       (b, 1, cfg.n_codebooks))
-            logits, cache = self.decode_fn(self.params, tok, cache,
-                                           jnp.int32(pos))
-            pos += 1
+        temps = jnp.asarray([r.temperature for r in requests], jnp.float32)
+        top_ks = jnp.asarray([getattr(r, "top_k", 0) or 0 for r in requests],
+                             jnp.int32)
+        keys = jnp.stack([jax.random.fold_in(key, i) for i in range(b)])
+        keys, sub = _split_keys(keys)
+        first = self._sample0(logits, sub, temps, top_ks)
+
+        outs: List[List[int]] = [[] for _ in requests]
+        remaining = [max(int(r.max_new_tokens), 0) for r in requests]
+        first_host = np.asarray(first)
+        for i in range(b):
+            if remaining[i] > 0:
+                outs[i].append(int(first_host[i]))
+                remaining[i] -= 1
+
+        pos = jnp.asarray(lengths, jnp.int32)
+        tokens = first
+        while any(n > 0 for n in remaining):
+            cache, tokens, pos, keys, toks = self._chunk_fn(
+                self.params, cache, tokens, pos, keys, temps, top_ks)
+            block = np.asarray(toks)          # the chunk's one host sync
+            for i in range(b):
+                take = min(remaining[i], block.shape[1])
+                outs[i].extend(int(t) for t in block[i, :take])
+                remaining[i] -= take
         return outs
+
+
+# ---------------------------------------------------------------------------
+# continuous batching
+# ---------------------------------------------------------------------------
+
+class ContinuousEngine(_EngineBase):
+    """Continuous-batching engine over ``slots`` fixed device decode lanes.
+
+    Requests are admitted into free slots and retired at chunk boundaries;
+    prompts prefill right-padded to a power-of-two bucket
+    (:func:`repro.serve.scheduler.seq_buckets`), each admission inserting its
+    slot's cache into the donated engine cache.  The decode batch is always
+    ``slots`` wide — free lanes decode padding that is simply discarded — so
+    the jitted shape set is ``{(slots, chunk)} x {prefill buckets}`` and
+    warm traffic never recompiles.
+
+    Output is token-identical to :class:`BatchedEngine` on the same
+    requests/key: per-request PRNG streams and padding-invariant prefill
+    make the tokens a function of the request alone.
+    """
+
+    def __init__(self, model: Model, params, max_seq: int = 512,
+                 slots: int = 4, chunk: int = 8, min_bucket: int = 16,
+                 tuning_cache=None, batch_sizes=None, aot="auto"):
+        super().__init__(model, params, max_seq=max_seq, chunk=chunk,
+                         tuning_cache=tuning_cache,
+                         batch_sizes=batch_sizes or (1, slots), aot=aot)
+        self.slots = slots
+        self.buckets = seq_buckets(max_seq, min_bucket)
+        self._insert = jax.jit(self._insert_slot, donate_argnums=(0,))
+        self._reset_state()
+
+    # -- device state --------------------------------------------------------
+
+    def _reset_state(self) -> None:
+        b = self.slots
+        self.cache = self.model.init_cache(b, self.max_seq)
+        self.tokens = jnp.zeros((b,), jnp.int32)
+        self.pos = jnp.zeros((b,), jnp.int32)
+        self.keys = jnp.stack(
+            [jax.random.PRNGKey(i) for i in range(b)])
+        self.temps = jnp.zeros((b,), jnp.float32)
+        self.top_ks = jnp.zeros((b,), jnp.int32)
+        self.sched = Scheduler(b)
+        self._requests: Dict[int, Request] = {}
+        self._stream_keys: Dict[int, jax.Array] = {}
+        self._next_id = 0
+        self._run_key = jax.random.PRNGKey(0)
+
+    @staticmethod
+    def _insert_slot(big, small, slot):
+        """Insert a batch=1 cache into the engine cache at ``slot``.
+
+        Works on every cache pytree (dense KVCache, rwkv states, the hybrid
+        mamba+kv dict): for each leaf, the batch axis is the unique axis
+        where the 1-slot shape differs from the engine shape."""
+        def ins(bl, sl):
+            axis = next((i for i, (a, c) in enumerate(zip(bl.shape, sl.shape))
+                         if a != c), None)
+            if axis is None:          # slots == 1: the slot IS the cache
+                return sl.astype(bl.dtype)
+            start = [jnp.int32(0)] * bl.ndim
+            start[axis] = jnp.asarray(slot, jnp.int32)
+            return jax.lax.dynamic_update_slice(
+                bl, sl.astype(bl.dtype), tuple(start))
+        return jax.tree_util.tree_map(ins, big, small)
+
+    # -- API -----------------------------------------------------------------
+
+    def submit(self, request: Request, stream: Optional[int] = None) -> int:
+        """Queue a request; returns its id.
+
+        ``stream`` is the request's PRNG stream index: its tokens are
+        sampled from ``fold_in(run_key, stream)`` advanced once per token.
+        ``run`` passes each request's position in its batch — the same
+        stream the static oracle uses — so outputs stay token-identical
+        across engine reuse and resubmission.  Streaming callers that omit
+        it get the (unique, monotonically increasing) request id."""
+        self._check_request(request)
+        rid = self._next_id
+        self._next_id += 1
+        self._requests[rid] = request
+        self._stream_keys[rid] = jax.random.fold_in(
+            self._run_key, rid if stream is None else stream)
+        self.sched.submit(rid, int(request.prompt.shape[0]),
+                          max(int(request.max_new_tokens), 0))
+        return rid
+
+    def take_output(self, rid: int) -> List[int]:
+        """Collect (and release) a finished request's tokens.
+
+        Completed requests hold their outputs until collected; collecting
+        prunes every per-request record, so a long-running engine's memory
+        is bounded by in-flight + uncollected work, not by total traffic."""
+        return self.sched.pop_output(rid)
+
+    def run(self, requests: List[Request], key=None) -> List[List[int]]:
+        """Serve a closed set of requests to completion (convenience driver
+        for the streaming ``submit`` + ``step_chunk`` API); returns outputs
+        in submission order."""
+        with self._options_scope():
+            self._run_key = key if key is not None else jax.random.PRNGKey(0)
+            rids = [self.submit(r, stream=i)
+                    for i, r in enumerate(requests)]
+            while not self.sched.idle:
+                self.step_chunk()
+            return [self.take_output(rid) for rid in rids]
+
+    # -- the chunk-boundary loop --------------------------------------------
+
+    def step_chunk(self) -> List[int]:
+        """Admit pending requests, then decode one fused chunk.
+
+        Returns the request ids retired at this boundary."""
+        finished: List[int] = []
+        for slot, rid in self.sched.admissions():
+            done = self._admit(slot, rid)
+            if done:
+                finished.append(rid)
+        if not self.sched.busy_slots():
+            return finished
+        self.cache, self.tokens, self.pos, self.keys, toks = self._chunk_fn(
+            self.params, self.cache, self.tokens, self.pos, self.keys,
+            self.temps, self.top_ks)
+        block = np.asarray(toks)              # the chunk's one host sync
+        finished.extend(self.sched.record_chunk(block))
+        for rid in finished:                  # release prompts/keys at retire
+            self._requests.pop(rid, None)
+            self._stream_keys.pop(rid, None)
+        return finished
+
+    def _admit(self, slot: int, rid: int) -> bool:
+        """Prefill ``rid`` into ``slot``; True if it retired immediately."""
+        r = self._requests[rid]
+        length = int(r.prompt.shape[0])
+        bucket = pick_bucket(length, self.buckets)
+        tokens = self._pad_prompt(r.prompt, bucket)[None]
+        small = self.model.init_cache(1, self.max_seq)
+        logits, small = self._prefill(self.params, tokens, small,
+                                      jnp.asarray([length], jnp.int32))
+        self.cache = self._insert(self.cache, small, slot)
+
+        rkey = self._stream_keys[rid]
+        carry, sub = _split_keys(rkey[None])
+        temp = jnp.asarray([r.temperature], jnp.float32)
+        top_k = jnp.asarray([getattr(r, "top_k", 0) or 0], jnp.int32)
+        first = self._sample0(logits, sub, temp, top_k)
+
+        self.tokens = self.tokens.at[slot].set(first[0])
+        self.pos = self.pos.at[slot].set(length)
+        self.keys = self.keys.at[slot].set(carry[0])
+        self.temps = self.temps.at[slot].set(temp[0])
+        self.top_ks = self.top_ks.at[slot].set(top_k[0])
+        # one tiny host sync per ADMISSION (not per token): the first token
+        return self.sched.record_first(slot, int(np.asarray(first)[0]))

@@ -1,0 +1,158 @@
+"""Continuous-batching scheduler: host-side bookkeeping for the serving
+engine's fixed device slots.
+
+The engine owns a device-resident batch of ``n_slots`` decode lanes; this
+module owns the *policy*: which pending request enters which free slot, which
+sequence-length bucket its prompt is padded to, and when a slot retires.  All
+decisions happen at chunk boundaries — inside a chunk the device runs a fused
+``lax.scan`` with no host involvement, so the scheduler never sees (or
+blocks) individual tokens.
+
+Shape discipline: prompts are RIGHT-padded to a bucket from
+:func:`seq_buckets` and the decode batch is always exactly ``n_slots`` wide,
+so the jitted prefill/decode functions see a small closed set of shapes —
+after one pass over the buckets there are zero recompiles, whatever traffic
+arrives.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Deque, Dict, List, Optional, Sequence, Tuple
+
+__all__ = ["seq_buckets", "pick_bucket", "Scheduler"]
+
+
+def seq_buckets(max_seq: int, min_bucket: int = 16) -> Tuple[int, ...]:
+    """Power-of-two prompt buckets up to ``max_seq`` (always included)."""
+    if max_seq < 1:
+        raise ValueError(f"max_seq must be >= 1, got {max_seq}")
+    out = []
+    b = min_bucket
+    while b < max_seq:
+        out.append(b)
+        b *= 2
+    out.append(max_seq)
+    return tuple(sorted(set(out)))
+
+
+def pick_bucket(n: int, buckets: Sequence[int]) -> int:
+    """The smallest bucket that fits ``n`` tokens."""
+    for b in sorted(buckets):
+        if n <= b:
+            return b
+    raise ValueError(f"prompt of {n} tokens exceeds the largest bucket "
+                     f"{max(buckets)}")
+
+
+@dataclasses.dataclass
+class _Slot:
+    """Host mirror of one device decode lane."""
+    req_id: int = -1          # -1: free
+    remaining: int = 0        # tokens still owed to the request
+
+    @property
+    def free(self) -> bool:
+        return self.req_id < 0
+
+
+class Scheduler:
+    """Admission/retirement bookkeeping over ``n_slots`` decode lanes.
+
+    The engine drives it:
+
+      * ``submit(req_id, prompt_len, max_new)`` queues a request;
+      * ``admissions()`` (at a chunk boundary) pops pending requests into
+        free slots, FIFO — the engine then prefills each admitted request;
+      * ``record_first(slot, token)`` accounts the token sampled from the
+        prefill logits;
+      * ``record_chunk(tokens)`` accounts one decoded chunk for every busy
+        slot (``tokens``: (n_slots, chunk) host array) and retires slots
+        whose requests are complete.
+
+    Outputs accumulate in ``outputs[req_id]``; tokens a slot decodes past
+    its request's ``max_new_tokens`` (chunks are fixed-length; requests are
+    not) are discarded here and never reach the caller.
+    """
+
+    def __init__(self, n_slots: int):
+        if n_slots < 1:
+            raise ValueError(f"n_slots must be >= 1, got {n_slots}")
+        self.slots: List[_Slot] = [_Slot() for _ in range(n_slots)]
+        self.pending: Deque[int] = deque()
+        self.meta: Dict[int, dict] = {}
+        self.outputs: Dict[int, List[int]] = {}
+
+    # -- intake --------------------------------------------------------------
+
+    def submit(self, req_id: int, prompt_len: int, max_new: int) -> None:
+        if req_id in self.meta:
+            raise ValueError(f"request id {req_id} already submitted")
+        self.meta[req_id] = {"prompt_len": prompt_len, "max_new": max_new}
+        self.outputs[req_id] = []
+        self.pending.append(req_id)
+
+    # -- chunk-boundary decisions -------------------------------------------
+
+    def admissions(self) -> List[Tuple[int, int]]:
+        """(slot index, req_id) pairs to admit now — free slots, FIFO."""
+        out = []
+        for i, slot in enumerate(self.slots):
+            if not self.pending:
+                break
+            if slot.free:
+                rid = self.pending.popleft()
+                slot.req_id = rid
+                slot.remaining = self.meta[rid]["max_new"]
+                out.append((i, rid))
+        return out
+
+    def record_first(self, slot_idx: int, token: int) -> bool:
+        """Account the prefill-sampled token; True if the request is already
+        complete (max_new_tokens == 1) and the slot retired."""
+        slot = self.slots[slot_idx]
+        if slot.remaining > 0:
+            self.outputs[slot.req_id].append(int(token))
+            slot.remaining -= 1
+        if slot.remaining == 0:
+            self._retire(slot)
+            return True
+        return False
+
+    def record_chunk(self, tokens) -> List[int]:
+        """Account one decoded chunk; returns req_ids retired this boundary.
+
+        ``tokens`` is a (n_slots, chunk) host int array — the single
+        device->host transfer of the chunk."""
+        finished = []
+        for i, slot in enumerate(self.slots):
+            if slot.free:
+                continue
+            take = min(slot.remaining, tokens.shape[1])
+            self.outputs[slot.req_id].extend(int(t) for t in tokens[i, :take])
+            slot.remaining -= take
+            if slot.remaining == 0:
+                finished.append(slot.req_id)
+                self._retire(slot)
+        return finished
+
+    @staticmethod
+    def _retire(slot: _Slot) -> None:
+        slot.req_id = -1
+        slot.remaining = 0
+
+    def pop_output(self, req_id: int) -> List[int]:
+        """Collect a request's tokens and drop its records — memory stays
+        bounded by in-flight + uncollected work, not total traffic."""
+        out = self.outputs.pop(req_id)
+        self.meta.pop(req_id, None)
+        return out
+
+    # -- state ---------------------------------------------------------------
+
+    def busy_slots(self) -> List[int]:
+        return [i for i, s in enumerate(self.slots) if not s.free]
+
+    @property
+    def idle(self) -> bool:
+        return not self.pending and all(s.free for s in self.slots)

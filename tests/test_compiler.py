@@ -340,9 +340,9 @@ class TestOpsDispatch:
         y = jnp.asarray(rng.randn(128), "float32")
         base = compiler.CompileOptions(backend="dpia-jnp", autotune=False)
         ops.dot(x, y, options=base)                       # jit=True entry
-        n_jitted = len(ops._PROGRAMS)
+        n_jitted = len(compiler.executor_cache())
         ops.dot(x, y, options=base.replace(jit=False))    # must not collide
-        assert len(ops._PROGRAMS) == 2 * n_jitted
+        assert len(compiler.executor_cache()) == 2 * n_jitted
         ops.clear_caches()
 
     def test_tuned_lookup_failure_warns_once(self, rng, monkeypatch):

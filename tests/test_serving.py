@@ -1,0 +1,368 @@
+"""Serving fast-path tests: fused decode chunks, per-request sampling,
+continuous batching vs the static-batch oracle, recompile accounting, and
+the executor-cache/AOT start-up flow."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models.common import ModelConfig
+from repro.models.transformer import Model
+from repro.serve.engine import (BatchedEngine, ContinuousEngine, Request,
+                                sample, sample_tokens)
+from repro.serve.scheduler import Scheduler, pick_bucket, seq_buckets
+
+
+def tiny_cfg(**kw):
+    base = dict(name="serve-t", family="dense", n_layers=2, d_model=32,
+                n_heads=4, n_kv_heads=2, d_ff=64, vocab=128, dtype="float32",
+                remat=False, max_seq=64)
+    base.update(kw)
+    return ModelConfig(**base)
+
+
+@pytest.fixture(scope="module")
+def dense_model():
+    cfg = tiny_cfg()
+    model = Model(cfg)
+    params = model.init_params(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def mixed_requests(cfg, n=6, key=None):
+    key = key if key is not None else jax.random.PRNGKey(5)
+    temps = [0.0, 0.9, 0.0, 1.3, 0.7, 0.0]
+    top_ks = [0, 5, 0, 0, 3, 0]
+    return [Request(
+        prompt=jax.random.randint(jax.random.fold_in(key, 100 + i),
+                                  (5 + 3 * i,), 0, cfg.vocab),
+        max_new_tokens=4 + 3 * i, temperature=temps[i % 6],
+        top_k=top_ks[i % 6]) for i in range(n)]
+
+
+# ---------------------------------------------------------------------------
+# per-request sampling (the requests[0].temperature regression)
+# ---------------------------------------------------------------------------
+
+class TestPerRequestSampling:
+    def test_greedy_request_unaffected_by_hot_neighbour(self, dense_model):
+        """Seed bug: the whole batch sampled at requests[0].temperature.
+        A greedy request must produce its solo-greedy tokens even when
+        request 0 runs hot."""
+        cfg, model, params = dense_model
+        key = jax.random.PRNGKey(11)
+        prompt = jnp.arange(7) % cfg.vocab
+        hot = Request(prompt=jnp.arange(5) % cfg.vocab, max_new_tokens=8,
+                      temperature=5.0)
+        cold = Request(prompt=prompt, max_new_tokens=8, temperature=0.0)
+
+        engine = BatchedEngine(model, params, max_seq=64, chunk=4)
+        together = engine.run([hot, cold], key=key)
+        alone = engine.run([Request(prompt=prompt, max_new_tokens=8,
+                                    temperature=0.0)], key=key)
+        assert together[1] == alone[0]
+
+    def test_hot_request_actually_samples(self, dense_model):
+        """And conversely: a hot request next to a greedy request[0] must
+        not silently decode greedily (two different keys almost surely
+        diverge at temperature 5)."""
+        cfg, model, params = dense_model
+        prompt = jnp.arange(6) % cfg.vocab
+        mk = lambda t: [Request(prompt=jnp.arange(4) % cfg.vocab,  # noqa:E731
+                                max_new_tokens=12, temperature=0.0),
+                        Request(prompt=prompt, max_new_tokens=12,
+                                temperature=t)]
+        engine = BatchedEngine(model, params, max_seq=64, chunk=4)
+        hot = engine.run(mk(5.0), key=jax.random.PRNGKey(1))
+        hot2 = engine.run(mk(5.0), key=jax.random.PRNGKey(2))
+        greedy = engine.run(mk(0.0), key=jax.random.PRNGKey(1))
+        assert hot[0] == greedy[0]            # request 0 greedy either way
+        assert hot[1] != greedy[1] or hot2[1] != greedy[1]
+
+
+# ---------------------------------------------------------------------------
+# continuous batching == static oracle
+# ---------------------------------------------------------------------------
+
+class TestContinuousVsStatic:
+    def test_token_identical_mixed_lengths_and_budgets(self, dense_model):
+        """Mixed prompt lengths, mixed max_new_tokens, mixed temperatures
+        and top-k, fewer slots than requests: the continuous engine must be
+        token-identical to the static-batch oracle."""
+        cfg, model, params = dense_model
+        key = jax.random.PRNGKey(7)
+        reqs = mixed_requests(cfg)
+        static = BatchedEngine(model, params, max_seq=64, chunk=4)
+        oracle = static.run(reqs, key=key)
+        for slots in (2, 3):
+            cont = ContinuousEngine(model, params, max_seq=64, slots=slots,
+                                    chunk=4, min_bucket=8)
+            got = cont.run(reqs, key=key)
+            assert got == oracle, f"slots={slots}"
+
+    def test_token_identical_greedy_reordered_traffic(self, dense_model):
+        """Greedy tokens are a function of the request alone: serving the
+        same requests in a different submission order must return the same
+        per-request outputs (outputs follow submission order)."""
+        cfg, model, params = dense_model
+        key = jax.random.PRNGKey(3)
+        reqs = [r for r in mixed_requests(cfg) if r.temperature == 0.0]
+        cont = ContinuousEngine(model, params, max_seq=64, slots=2, chunk=4,
+                                min_bucket=8)
+        a = cont.run(reqs, key=key)
+        b = cont.run(list(reversed(reqs)), key=key)
+        assert a == list(reversed(b))
+
+    def test_reused_engine_stays_token_identical(self, dense_model):
+        """PRNG streams are per-RUN batch indices, not lifetime request
+        ids: the second (sampled!) run of a reused engine must still match
+        the oracle and the first run."""
+        cfg, model, params = dense_model
+        key = jax.random.PRNGKey(7)
+        reqs = mixed_requests(cfg)
+        assert any(r.temperature > 0 for r in reqs)
+        oracle = BatchedEngine(model, params, max_seq=64,
+                               chunk=4).run(reqs, key=key)
+        cont = ContinuousEngine(model, params, max_seq=64, slots=2, chunk=4,
+                                min_bucket=8)
+        first = cont.run(reqs, key=key)
+        second = cont.run(reqs, key=key)
+        assert first == oracle
+        assert second == oracle
+
+    def test_completed_requests_are_released(self, dense_model):
+        """run() collects outputs and drops every per-request record — a
+        long-running engine's memory is bounded by in-flight work."""
+        cfg, model, params = dense_model
+        cont = ContinuousEngine(model, params, max_seq=64, slots=2, chunk=4,
+                                min_bucket=8)
+        for k in range(3):
+            cont.run(mixed_requests(cfg, n=4), key=jax.random.PRNGKey(k))
+        assert cont._requests == {} and cont._stream_keys == {}
+        assert cont.sched.outputs == {} and cont.sched.meta == {}
+
+    def test_output_lengths_respect_budgets(self, dense_model):
+        cfg, model, params = dense_model
+        reqs = mixed_requests(cfg)
+        cont = ContinuousEngine(model, params, max_seq=64, slots=2, chunk=4,
+                                min_bucket=8)
+        outs = cont.run(reqs, key=jax.random.PRNGKey(0))
+        assert [len(o) for o in outs] == [r.max_new_tokens for r in reqs]
+        assert all(0 <= t < cfg.vocab for o in outs for t in o)
+
+
+# ---------------------------------------------------------------------------
+# sampling edge cases
+# ---------------------------------------------------------------------------
+
+class TestSample:
+    def test_top_k_one_is_argmax(self):
+        logits = jnp.asarray([[0.1, 2.0, -1.0, 0.5]])
+        for _ in range(3):
+            tok = sample(logits, jax.random.PRNGKey(0), temperature=1.0,
+                         top_k=1)
+            assert int(tok[0]) == 1
+
+    def test_top_k_keeps_ties_at_cutoff(self):
+        """The k-th largest value is a >=-threshold: ties with the cutoff
+        all stay in the candidate set."""
+        logits = jnp.asarray([[2.0, 2.0, 2.0, -10.0]])
+        seen = set()
+        for i in range(40):
+            tok = sample(logits, jax.random.PRNGKey(i), temperature=1.0,
+                         top_k=2)
+            seen.add(int(tok[0]))
+        assert seen == {0, 1, 2}      # all three tied values reachable
+        assert 3 not in seen
+
+    def test_top_k_zero_and_oversized_are_noops(self):
+        logits = jnp.asarray([[0.0, 1.0, 2.0, 3.0]])
+        k = jax.random.PRNGKey(4)
+        full = sample(logits, k, temperature=1.0, top_k=0)
+        over = sample(logits, k, temperature=1.0, top_k=99)
+        assert int(full[0]) == int(over[0])
+
+    def test_zero_temperature_is_greedy(self):
+        logits = jnp.asarray([[0.1, 5.0, -1.0]])
+        assert int(sample(logits, jax.random.PRNGKey(0))[0]) == 1
+
+    def test_batched_matches_scalar_per_row(self):
+        """sample_tokens must agree with sample() row by row for every
+        (temperature, top_k) mix in the batch."""
+        rng = np.random.RandomState(0)
+        logits = jnp.asarray(rng.randn(4, 16), "float32")
+        keys = jnp.stack([jax.random.PRNGKey(i) for i in range(4)])
+        temps = jnp.asarray([0.0, 1.0, 0.7, 2.0], "float32")
+        top_ks = jnp.asarray([0, 3, 0, 1], "int32")
+        got = sample_tokens(logits, keys, temps, top_ks)
+        for i in range(4):
+            want = sample(logits[i:i + 1], keys[i],
+                          temperature=float(temps[i]), top_k=int(top_ks[i]))
+            assert int(got[i]) == int(want[0]), i
+
+
+# ---------------------------------------------------------------------------
+# scheduler policy
+# ---------------------------------------------------------------------------
+
+class TestScheduler:
+    def test_buckets(self):
+        assert seq_buckets(64, 16) == (16, 32, 64)
+        assert seq_buckets(48, 16) == (16, 32, 48)
+        assert pick_bucket(5, (16, 32)) == 16
+        assert pick_bucket(17, (16, 32)) == 32
+        with pytest.raises(ValueError):
+            pick_bucket(33, (16, 32))
+
+    def test_fifo_admission_and_retirement(self):
+        s = Scheduler(2)
+        for rid in range(3):
+            s.submit(rid, prompt_len=4, max_new=3)
+        assert s.admissions() == [(0, 0), (1, 1)]     # FIFO into free slots
+        assert s.admissions() == []                   # no free slot left
+        s.record_first(0, 7)
+        s.record_first(1, 8)
+        toks = np.arange(8).reshape(2, 4)             # chunk of 4 > remaining
+        done = s.record_chunk(toks)
+        assert sorted(done) == [0, 1]
+        assert s.outputs[0] == [7, 0, 1]              # extra tokens discarded
+        assert s.outputs[1] == [8, 4, 5]
+        assert s.admissions() == [(0, 2)]             # freed slot reused
+        assert not s.idle
+
+    def test_max_new_one_retires_at_prefill(self):
+        s = Scheduler(1)
+        s.submit(0, prompt_len=4, max_new=1)
+        assert s.admissions() == [(0, 0)]
+        assert s.record_first(0, 9) is True
+        assert s.outputs[0] == [9]
+        assert s.idle
+
+
+# ---------------------------------------------------------------------------
+# recompile accounting: bounded shapes, zero recompiles after warm-up
+# ---------------------------------------------------------------------------
+
+class TestRecompiles:
+    def test_zero_recompiles_after_bucket_warmup(self, dense_model):
+        """After one pass over the prompt buckets, arbitrary further
+        traffic (new lengths, budgets, temperatures) must hit the jit
+        caches exactly — zero decode or prefill cache misses."""
+        cfg, model, params = dense_model
+        cont = ContinuousEngine(model, params, max_seq=64, slots=2, chunk=4,
+                                min_bucket=8)
+        key = jax.random.PRNGKey(0)
+        # warm-up: one prompt per bucket (8, 16, 32, 64 -> those that fit)
+        warm = [Request(prompt=jnp.arange(min(b, 40)) % cfg.vocab,
+                        max_new_tokens=3)
+                for b in cont.buckets if min(b, 40) + 3 <= 64]
+        cont.run(warm, key=key)
+        decode0 = cont.decode_cache_misses()
+        prefill0 = int(cont._prefill._cache_size())
+        assert decode0 >= 1
+
+        traffic = [Request(
+            prompt=jnp.arange(3 + 5 * i) % cfg.vocab,
+            max_new_tokens=2 + i, temperature=0.3 * i, top_k=i)
+            for i in range(5)]
+        cont.run(traffic, key=jax.random.PRNGKey(1))
+        assert cont.decode_cache_misses() == decode0
+        assert int(cont._prefill._cache_size()) == prefill0
+
+    def test_static_engine_one_decode_compile(self, dense_model):
+        """The fused chunk compiles once per batch shape; chunks within and
+        across runs of the same shape reuse it."""
+        cfg, model, params = dense_model
+        engine = BatchedEngine(model, params, max_seq=64, chunk=4)
+        reqs = mixed_requests(cfg, n=4)
+        engine.run(reqs, key=jax.random.PRNGKey(0))
+        assert engine.decode_cache_misses() == 1
+        engine.run(reqs, key=jax.random.PRNGKey(1))
+        assert engine.decode_cache_misses() == 1
+
+
+# ---------------------------------------------------------------------------
+# executor cache + AOT start-up
+# ---------------------------------------------------------------------------
+
+class TestEngineAot:
+    def test_restart_skips_staging(self, dense_model, tmp_path):
+        """Engine #1 tunes, stages, and exports its executors; engine #2 in
+        fresh caches loads them AOT — zero staged builds on restart."""
+        from repro import compiler
+        from repro.kernels import ops
+        cfg, model, params = dense_model
+        cpath = str(tmp_path / "tune.json")
+
+        ops.clear_caches()
+        BatchedEngine(model, params, max_seq=32, tuning_cache=cpath,
+                      batch_sizes=(1, 2), chunk=4)
+        aot_dir = cpath + ".aot"
+        assert os.path.isdir(aot_dir) and len(os.listdir(aot_dir)) > 0
+        built = compiler.executor_cache().stats()["builds"]
+        assert built > 0
+
+        ops.clear_caches()
+        e2 = BatchedEngine(model, params, max_seq=32, tuning_cache=cpath,
+                           batch_sizes=(1, 2), chunk=4)
+        st = compiler.executor_cache().stats()
+        assert st["builds"] == 0, st          # staging skipped entirely
+        assert st["aot_loads"] == built
+        outs = e2.run([Request(prompt=jnp.arange(5) % cfg.vocab,
+                               max_new_tokens=4)])
+        assert len(outs[0]) == 4
+        ops.clear_caches()
+
+    def test_program_export_load_roundtrip(self, tmp_path):
+        from repro import compiler
+        prog = compiler.Program.from_kernel("matmul", m=8, k=8, n=8)
+        prog.check().lower()
+        path = prog.export(str(tmp_path / "mm.json"))
+        loaded = compiler.Program.load(path)
+        assert loaded.kernel == "matmul" and loaded.shape == dict(m=8, k=8,
+                                                                  n=8)
+        rng = np.random.RandomState(0)
+        a = jnp.asarray(rng.randn(8, 8), "float32")
+        b = jnp.asarray(rng.randn(8, 8), "float32")
+        np.testing.assert_allclose(
+            np.asarray(loaded.compile("jnp")(a, b)),
+            np.asarray(prog.compile("jnp")(a, b)), rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# model-level: vector positions + length-aware prefill
+# ---------------------------------------------------------------------------
+
+class TestDecodePositions:
+    def test_vector_pos_matches_scalar(self, dense_model):
+        cfg, model, params = dense_model
+        b, s = 3, 8
+        toks = jax.random.randint(jax.random.PRNGKey(1), (b, s), 0,
+                                  cfg.vocab)
+        cache = model.init_cache(b, 32)
+        last, cache = model.prefill(params, toks, cache)
+        nxt = jnp.argmax(last, -1)[:, None]
+        lg_s, c_s = model.decode_step(params, nxt, cache, jnp.int32(s))
+        lg_v, c_v = model.decode_step(params, nxt, cache,
+                                      jnp.full((b,), s, jnp.int32))
+        np.testing.assert_allclose(np.asarray(lg_s), np.asarray(lg_v),
+                                   rtol=1e-6)
+        for a, bb in zip(jax.tree_util.tree_leaves(c_s),
+                         jax.tree_util.tree_leaves(c_v)):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(bb),
+                                       rtol=1e-6)
+
+    def test_right_padded_prefill_is_padding_invariant(self, dense_model):
+        """For attention families a right-padded prefill with lengths= is
+        the unpadded computation: causal masking keeps real tokens from
+        ever attending to the padding."""
+        cfg, model, params = dense_model
+        p = jax.random.randint(jax.random.PRNGKey(2), (5,), 0, cfg.vocab)
+        un, _ = model.prefill(params, p[None], model.init_cache(1, 32))
+        padded = jnp.pad(p, (0, 11))[None]
+        pad_l, _ = model.prefill(params, padded, model.init_cache(1, 32),
+                                 lengths=jnp.asarray([5]))
+        np.testing.assert_allclose(np.asarray(un), np.asarray(pad_l),
+                                   rtol=1e-5, atol=1e-5)
