@@ -60,7 +60,7 @@ def _resolve_cache(cache) -> TuningCache:
 
 
 def tune(spec: Spec, *, backend: str = "jnp", dtype: str = "float32",
-         mesh: str = "single", cache=None, measure: bool = True,
+         mesh=None, cache=None, measure: bool = True,
          top_k: int = 4, iters: int = 5, force: bool = False,
          verify: bool = False, arg_vars: Optional[List[P.Var]] = None,
          **shape) -> TuneResult:
@@ -73,11 +73,37 @@ def tune(spec: Spec, *, backend: str = "jnp", dtype: str = "float32",
     ``repro.compiler.Program`` (kernel/shape metadata is used when present,
     else its expression + arg Vars).
 
+    ``mesh`` is a ``jax.sharding.Mesh``, a canonical descriptor string
+    (``"single"`` / ``"data=8"``; see ``repro.mesh.descriptor``), or None —
+    which resolves the *active* mesh (``compiler.options(mesh=...)`` scope,
+    else the process mesh context) rather than silently assuming
+    single-device.  The resolved descriptor is part of the cache key, so
+    tuning decisions never leak across meshes.  With ``backend="shardmap"``
+    the search space is the mesh-placement space (which axis, per-shard
+    chunk factor; ``repro.mesh.space``) ranked by the collective-aware cost
+    model.
+
     ``measure=False`` ranks analytically only (no compilation — cheap
     enough for inline use on a serving path).  ``verify=True`` additionally
     checks every measured candidate's output against the default strategy.
     """
+    from repro import mesh as mesh_mod
     c = _resolve_cache(cache)
+    mesh_desc = (mesh_mod.descriptor(mesh) if mesh is not None
+                 else mesh_mod.current_descriptor())
+
+    # mesh candidates can only be *measured* against a concrete Mesh whose
+    # descriptor matches the key; with only a descriptor (offline tuning)
+    # the search degrades to analytic-only — decided HERE, before the cache
+    # check, so an analytic record is a stable answer, not a retry loop
+    measure_kw: Dict[str, object] = {}
+    if backend == "shardmap" and measure:
+        mobj = (mesh if (mesh is not None and not isinstance(mesh, str))
+                else mesh_mod.resolve_mesh(None))
+        if mobj is not None and mesh_mod.descriptor(mobj) == mesh_desc:
+            measure_kw = {"mesh": mobj}
+        else:
+            measure = False
 
     if isinstance(spec, Program):
         if spec.kernel is not None:
@@ -107,7 +133,7 @@ def tune(spec: Spec, *, backend: str = "jnp", dtype: str = "float32",
                         f"{type(spec).__name__}")
 
     # cache check happens BEFORE any space enumeration: a hit really is free
-    key = make_key(kernel, shape, dtype, backend, mesh)
+    key = make_key(kernel, shape, dtype, backend, mesh_desc)
     cached = c.get(key)
     if cached is not None and not force:
         # an analytic-only record is upgraded when measurement is requested
@@ -120,12 +146,25 @@ def tune(spec: Spec, *, backend: str = "jnp", dtype: str = "float32",
                 n_candidates=int(cached.get("n_candidates", 0)))
 
     if isinstance(spec, str):
-        cands = space_mod.enumerate_space(kernel, **shape)
-        try:
-            default = space_mod.candidate_from_params(
-                kernel, space_mod.default_params(kernel, **shape), **shape)
-        except ValueError:
-            default = None
+        if backend == "shardmap":
+            # mesh-placement space, enumerated from the descriptor alone
+            axes = mesh_mod.parse_descriptor(mesh_desc)
+            cands = mesh_mod.mesh_space(kernel, axes, **shape)
+            try:
+                default = mesh_mod.mesh_candidate_from_params(
+                    kernel, mesh_mod.default_mesh_params(kernel, axes,
+                                                         **shape),
+                    axes, **shape)
+            except ValueError:
+                default = None
+        else:
+            cands = space_mod.enumerate_space(kernel, **shape)
+            try:
+                default = space_mod.candidate_from_params(
+                    kernel, space_mod.default_params(kernel, **shape),
+                    **shape)
+            except ValueError:
+                default = None
     else:
         cands = space_mod.rewrite_candidates(spec, arg_vars)
         default = cands[0]  # the identity rewrite
@@ -133,7 +172,8 @@ def tune(spec: Spec, *, backend: str = "jnp", dtype: str = "float32",
     if not cands:
         raise ValueError(
             f"tune: empty strategy space for {kernel!r} at shape {shape!r} "
-            f"(no block size divides the extents?)")
+            f"on mesh {mesh_desc!r} (no block size / mesh axis divides the "
+            f"extents?)")
 
     ranked = measure_mod.rank_by_cost(cands)
     chosen, chosen_cost = ranked[0]
@@ -148,7 +188,8 @@ def tune(spec: Spec, *, backend: str = "jnp", dtype: str = "float32",
             pick.append(default)
         timings = measure_mod.measure_candidates(
             pick, backend=backend, iters=iters,
-            verify_against=default if verify else None)
+            verify_against=default if verify else None,
+            compile_kw=measure_kw)
         if timings:
             by_key = {cand.params_key(): cand for cand in pick}
             best_key = min(timings, key=lambda k2: (timings[k2], k2))
@@ -163,7 +204,7 @@ def tune(spec: Spec, *, backend: str = "jnp", dtype: str = "float32",
         "cost_s": chosen_cost if chosen_cost != float("inf") else None,
         "measured_us": measured_us, "timings": timings,
         "shape": dict(shape), "backend": backend, "dtype": dtype,
-        "mesh": mesh, "n_candidates": len(cands),
+        "mesh": mesh_desc, "n_candidates": len(cands),
     }
     c.put(key, record)
     return TuneResult(kernel=kernel, key=key, params=chosen.params_dict,
@@ -173,12 +214,13 @@ def tune(spec: Spec, *, backend: str = "jnp", dtype: str = "float32",
 
 
 def get_tuned(kernel: str, *, backend: str = "jnp", dtype: str = "float32",
-              mesh: str = "single", cache=None, **shape) -> Dict[str, object]:
+              mesh=None, cache=None, **shape) -> Dict[str, object]:
     """Tuned params for a kernel/shape — cache hit or cheap analytic search.
 
-    This is the serving-path entry: it never compiles or measures, so a
-    cold call costs one pass of the analytic model and a hot call is a
-    dict lookup."""
+    ``mesh`` as in :func:`tune`: a Mesh / descriptor string / None (resolve
+    the active mesh) — the descriptor is part of the cache key.  This is
+    the serving-path entry: it never compiles or measures, so a cold call
+    costs one pass of the analytic model and a hot call is a dict lookup."""
     res = tune(kernel, backend=backend, dtype=dtype, mesh=mesh, cache=cache,
                measure=False, **shape)
     return res.params

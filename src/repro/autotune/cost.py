@@ -9,7 +9,15 @@ into predicted seconds:
 
     t = max(flops / peak, hbm_bytes / bw)
         + grid_steps * grid_overhead + loop_iters * loop_overhead
+        + ici_bytes / ici_bw + collective_steps * collective_launch
         + vmem-overflow penalty
+
+Mesh-level strategies are costed per *device*: a ``map[mesh(ax)]`` charges
+one shard's body (wall clock, not the sum over shards) and a
+``reduce[mesh(ax)]`` charges one ring all-reduce (2(n-1) hops x result
+bytes over the interconnect) — so the ranking trades compute-per-device
+against collective latency and refuses to shard problems too small to
+amortise the all-reduce.
 
 Absolute numbers are not the point — *order* is.  The model needs exactly
 the properties the search relies on: monotone in problem size, punishes
@@ -41,6 +49,8 @@ class HwModel:
     grid_overhead_s: float = 2.0e-6  # per grid step (kernel launch / dispatch)
     loop_overhead_s: float = 5.0e-8  # per sequential loop iteration
     vmem_penalty_s: float = 1.0e-3   # added per x of working-set overflow
+    ici_bw: float = 5.0e10           # inter-chip bytes/s (collective traffic)
+    collective_launch_s: float = 5.0e-6  # per collective step (ring hop)
 
 
 DEFAULT_HW = HwModel()
@@ -53,23 +63,30 @@ class CostEstimate:
     vmem_peak: float = 0.0     # largest per-grid-step working set
     grid_steps: float = 0.0
     loop_iters: float = 0.0
+    ici_bytes: float = 0.0     # bytes crossing the mesh interconnect
+    collective_steps: float = 0.0  # latency-bound collective hops
 
     def __add__(self, o: "CostEstimate") -> "CostEstimate":
         return CostEstimate(self.flops + o.flops,
                             self.hbm_bytes + o.hbm_bytes,
                             max(self.vmem_peak, o.vmem_peak),
                             self.grid_steps + o.grid_steps,
-                            self.loop_iters + o.loop_iters)
+                            self.loop_iters + o.loop_iters,
+                            self.ici_bytes + o.ici_bytes,
+                            self.collective_steps + o.collective_steps)
 
     def scaled(self, s: float) -> "CostEstimate":
         return CostEstimate(self.flops * s, self.hbm_bytes * s,
                             self.vmem_peak, self.grid_steps * s,
-                            self.loop_iters * s)
+                            self.loop_iters * s, self.ici_bytes * s,
+                            self.collective_steps * s)
 
     def seconds(self, hw: HwModel = DEFAULT_HW) -> float:
         t = max(self.flops / hw.peak_flops, self.hbm_bytes / hw.hbm_bw)
         t += self.grid_steps * hw.grid_overhead_s
         t += self.loop_iters * hw.loop_overhead_s
+        t += self.ici_bytes / hw.ici_bw
+        t += self.collective_steps * hw.collective_launch_s
         if self.vmem_peak > hw.vmem_bytes:
             t += hw.vmem_penalty_s * (self.vmem_peak / hw.vmem_bytes)
         return t
@@ -119,6 +136,12 @@ def estimate(expr: P.Phrase) -> CostEstimate:  # noqa: C901
         x = P.Var(P.fresh("c"), P.ExpT(d.elem))
         body = estimate(expr.f(x))
         feed = estimate(expr.e)
+        if expr.level.kind == "mesh":
+            # SPMD over d.n shards: every device reads 1/n of the feed and
+            # runs the per-shard body ONCE — wall clock is the per-device
+            # cost, not the sum over shards (that is the whole point of the
+            # mesh placement; the collective price lands on the mesh Reduce)
+            return feed.scaled(1.0 / d.n) + body
         total = feed + body.scaled(d.n)
         if expr.level.kind == "grid":
             step_ws = body.hbm_bytes + _bytes_of(d.elem)
@@ -127,7 +150,7 @@ def estimate(expr: P.Phrase) -> CostEstimate:  # noqa: C901
                            vmem_peak=max(total.vmem_peak, step_ws))
         if expr.level.kind in ("seq", "par"):
             return replace(total, loop_iters=total.loop_iters + d.n)
-        # lanes / mesh: one vectorised / per-shard step, no per-elem loop
+        # lanes: one vectorised step, no per-elem loop
         return total
     if isinstance(expr, P.Reduce):
         d = P.exp_data(expr.e)
@@ -137,6 +160,14 @@ def estimate(expr: P.Phrase) -> CostEstimate:  # noqa: C901
         a = P.Var(P.fresh("c"), P.ExpT(di))
         body = estimate(expr.f(x, a))
         feed = estimate(expr.e) + estimate(expr.init)
+        if expr.level.kind == "mesh":
+            # the partials live one-per-shard; combining them is a single
+            # ring all-reduce of the result value: 2(n-1) hops, each moving
+            # the result bytes over the interconnect (latency-bound for the
+            # scalar reductions, bandwidth-bound for block results)
+            hops = 2.0 * max(d.n - 1, 1)
+            return feed + CostEstimate(ici_bytes=hops * _bytes_of(di),
+                                       collective_steps=hops)
         total = feed + body.scaled(d.n)
         if expr.level.kind in ("seq", "par"):
             return replace(total, loop_iters=total.loop_iters + d.n)

@@ -37,12 +37,22 @@ def args_for(arg_vars: Sequence[P.Var], seed: int = 0) -> Tuple:
     return tuple(out)
 
 
-def compile_candidate(cand: Candidate, backend: str = "jnp"):
+def compile_candidate(cand: Candidate, backend: str = "jnp",
+                      compile_kw: Optional[dict] = None):
     """(jitted callable, concrete args) for a candidate, via the staged
     pipeline: the candidate becomes a ``repro.compiler.Program`` and runs
-    ``check() -> lower() -> compile(backend)``."""
+    ``check() -> lower() -> compile(backend)``.
+
+    ``compile_kw`` carries backend compile arguments (the shardmap
+    backend's ``mesh=``); mesh-level terms go straight to Stage III —
+    shard_map consumes the functional term, and the per-shard bodies are
+    checked by the inner backend."""
     prog = cand.program()
-    fn = prog.check().lower().compile(backend, jit=True)
+    kw = dict(compile_kw or {})
+    if kw.get("mesh") is not None or backend == "shardmap":
+        fn = prog.compile(backend, jit=True, **kw)
+    else:
+        fn = prog.check().lower().compile(backend, jit=True, **kw)
     return fn, args_for(prog.arg_vars)
 
 
@@ -62,20 +72,23 @@ def time_callable(fn, args, iters: int = 5, warmup: int = 1) -> float:
 
 def measure_candidates(cands: Sequence[Candidate], *, backend: str = "jnp",
                        iters: int = 5, seed: int = 0,
-                       verify_against: Optional[Candidate] = None
+                       verify_against: Optional[Candidate] = None,
+                       compile_kw: Optional[dict] = None
                        ) -> Dict[str, float]:
     """Time each candidate; returns {params_key: us}.  Failures are dropped.
 
     When ``verify_against`` is given, every candidate's output is checked
     against that reference candidate's output (strategy preservation as a
     runtime assertion) and mismatching candidates are discarded.
+    ``compile_kw`` is threaded to every compile (e.g. shardmap's mesh).
     """
     import jax
 
     ref_out = None
     if verify_against is not None:
         try:
-            rfn, rargs = compile_candidate(verify_against, backend)
+            rfn, rargs = compile_candidate(verify_against, backend,
+                                           compile_kw)
             ref_out = np.asarray(jax.block_until_ready(rfn(*rargs)))
         except Exception:
             ref_out = None
@@ -83,7 +96,7 @@ def measure_candidates(cands: Sequence[Candidate], *, backend: str = "jnp",
     out: Dict[str, float] = {}
     for c in cands:
         try:
-            fn, args = compile_candidate(c, backend)
+            fn, args = compile_candidate(c, backend, compile_kw)
             if ref_out is not None:
                 got = np.asarray(jax.block_until_ready(fn(*args)))
                 np.testing.assert_allclose(got, ref_out, rtol=1e-3, atol=1e-4)

@@ -112,11 +112,14 @@ def ops_impls() -> Tuple[str, ...]:
     """Valid kernel-layer impl names for ``repro.kernels.ops`` dispatch.
 
     The two native impls plus one ``dpia-<backend>`` entry per registered
-    single-host backend (backends that *require* extra compile arguments,
-    e.g. a mesh, cannot be driven from the op layer and are excluded)."""
+    backend whose requirements the op layer can satisfy: no requirements,
+    or a ``mesh`` requirement (resolvable from ``CompileOptions.mesh`` /
+    the process mesh context, so ``dpia-shardmap`` IS an op-layer impl).
+    Backends requiring anything else cannot be driven from the op layer
+    and are excluded."""
     names = ["xla", "pallas"]
     for b in backend_names():
-        if get_backend(b).requires:
+        if set(get_backend(b).requires) - {"mesh"}:
             continue
         names.append("dpia-" + b)
     return tuple(dict.fromkeys(names))

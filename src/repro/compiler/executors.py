@@ -28,7 +28,9 @@ from typing import Callable, Dict, Optional, Tuple
 
 __all__ = ["ExecutorCache", "make_key", "default_cache"]
 
-AOT_VERSION = 1
+# v2: make_key gained the mesh-descriptor component — v1 artefacts' keys can
+# never hit again, so they must not be parsed/compiled on load
+AOT_VERSION = 2
 
 
 def _fmt_params(params: Optional[Dict[str, object]]) -> str:
@@ -39,13 +41,16 @@ def _fmt_params(params: Optional[Dict[str, object]]) -> str:
 
 def make_key(kernel: str, shape: Dict[str, object], backend: str, *,
              params: Optional[Dict[str, object]] = None,
-             dtype: str = "float32", interpret: bool = True,
-             jit: bool = True) -> str:
+             dtype: str = "float32", mesh: str = "single",
+             interpret: bool = True, jit: bool = True) -> str:
     """Canonical executor key.  Every component the compiled artefact depends
-    on is in the key (same discipline as the tuning cache), so a hit is
-    always safe to reuse."""
+    on is in the key (same discipline as the tuning cache) — including the
+    mesh descriptor (``repro.mesh.descriptor``), so an executor compiled
+    against one mesh can never serve another — and a hit is always safe to
+    reuse."""
     shape_s = ",".join(f"{k}={shape[k]}" for k in sorted(shape))
-    return (f"{kernel}|{shape_s}|{dtype}|{backend}|{_fmt_params(params)}"
+    return (f"{kernel}|{shape_s}|{dtype}|{backend}|{mesh or 'single'}"
+            f"|{_fmt_params(params)}"
             f"|interpret={int(bool(interpret))}|jit={int(bool(jit))}")
 
 
@@ -129,6 +134,7 @@ class ExecutorCache:
         directory is append-only: a key retired by e.g. new tuned params
         leaves its file behind, costing one JSON parse on later loads.
         Returns the number of programs written."""
+        from .backends import get_backend
         from .program import CompiledKernel
         os.makedirs(directory, exist_ok=True)
         keyset = None if keys is None else set(keys)
@@ -138,17 +144,29 @@ class ExecutorCache:
                 continue
             if keyset is not None and key not in keyset:
                 continue
+            try:
+                if get_backend(fn.backend).requires:
+                    # backends with compile-time requirements (shardmap's
+                    # mesh) cannot be rebuilt from a doc in a later process
+                    # — those executors re-stage on restart, never export
+                    continue
+            except ValueError:
+                continue  # backend no longer registered
             path = self._aot_path(directory, key)
             if os.path.exists(path):
                 continue
             meta = self._meta.get(key, {})
+            try:
+                prog_doc = fn.program.to_doc()
+            except Exception:
+                continue  # no persistable lowering: skip, don't crash
             doc = {
                 "version": AOT_VERSION,
                 "key": key,
                 "backend": fn.backend,
                 "interpret": bool(meta.get("interpret", True)),
                 "jit": bool(meta.get("jit", True)),
-                "program": fn.program.to_doc(),
+                "program": prog_doc,
             }
             tmp = path + ".tmp"
             with open(tmp, "w") as f:
@@ -192,7 +210,9 @@ class ExecutorCache:
                 with self._lock:
                     self._aot_loads += 1
                 loaded += 1
-            except (OSError, ValueError, KeyError):
+            except (OSError, ValueError, KeyError, TypeError):
+                # TypeError: an artefact whose backend now has unmet compile
+                # requirements — skip it, never poison the whole load
                 continue
         return loaded
 

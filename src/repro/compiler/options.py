@@ -58,12 +58,17 @@ class CompileOptions:
     interpret     run Pallas kernels in interpret mode (default: auto from
                   the platform — True only on CPU; see default_interpret)
     jit           wrap compiled programs in jax.jit
+    mesh          jax.sharding.Mesh for mesh-level backends (dpia-shardmap)
+                  and mesh-keyed tuning; None defers to the process mesh
+                  context (repro.sharding.ctx.get_mesh()), so single-device
+                  runs stay single-device without ever naming a mesh
     """
     backend: str = "xla"
     autotune: bool = field(default_factory=_env_autotune)
     tuning_cache: object = None
     interpret: bool = field(default_factory=default_interpret)
     jit: bool = True
+    mesh: object = None
 
     def __post_init__(self):
         valid = ops_impls()
@@ -83,6 +88,22 @@ class CompileOptions:
             return self.backend[len("dpia-"):]
         # native impls validate DPIA programs on the reference backend
         return "jnp"
+
+    def resolved_mesh(self):
+        """The concrete Mesh mesh-level compilation runs against: the
+        explicit ``mesh`` field, else the process mesh context
+        (``repro.sharding.ctx``).  None means single-device."""
+        if self.mesh is not None:
+            return self.mesh
+        from repro.sharding import ctx
+        return ctx.get_mesh()
+
+    def mesh_descriptor(self) -> str:
+        """Canonical descriptor of :meth:`resolved_mesh` — the mesh
+        component every tuning/executor cache key carries (``"single"``
+        when no mesh is in scope)."""
+        from repro.mesh import descriptor
+        return descriptor(self.resolved_mesh())
 
 
 class _Scope(threading.local):

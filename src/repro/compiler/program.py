@@ -211,10 +211,19 @@ class Program:
         opts = options or current_options()
         b = get_backend(backend if backend is not None else opts.dpia_backend)
         missing = [r for r in b.requires if r not in backend_kw]
+        if "mesh" in missing:
+            # a mesh requirement is satisfiable from the options / the
+            # process mesh context — explicit backend_kw still wins
+            mesh = opts.resolved_mesh()
+            if mesh is not None:
+                backend_kw["mesh"] = mesh
+                missing.remove("mesh")
         if missing:
             raise TypeError(f"backend {b.name!r} requires keyword "
                             f"argument(s) {missing} (e.g. the mesh for "
-                            f"shard_map)")
+                            f"shard_map — pass mesh=, set "
+                            f"compiler.options(mesh=...), or "
+                            f"sharding.ctx.set_mesh)")
         if self.expr is None and "lowered" not in b.accepts:
             raise ValueError(
                 f"backend {b.name!r} consumes functional terms only and "

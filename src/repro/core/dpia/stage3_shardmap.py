@@ -13,6 +13,10 @@ Canonical forms accepted (what the strategy rewrites produce):
   2. Reduce_{mesh ax} (+|max) z (Map_{mesh ax} f (Split c E))  -- map+all-reduce
 
 where E is built from input Vars with Zip (chunking commutes with Zip).
+Argument Vars that do NOT flow through the Split (a scal's alpha, rmsnorm's
+weight vector, matmul's B operand) are passed to every shard *replicated*
+(``in_specs=PartitionSpec()``) — the mesh map shards the big operand and
+broadcasts the small ones, exactly the data-parallel reading of the term.
 """
 from __future__ import annotations
 
@@ -68,6 +72,11 @@ def compile_expr_shardmap(expr: P.Phrase, arg_vars: Sequence[P.Var],
 
     names = [v.name for v in arg_vars]
 
+    def extras_of(pairs):
+        """Argument Vars not flowing through the Split: replicated inputs."""
+        chunked = {v.name for v, _ in pairs}
+        return [v for v in arg_vars if v.name not in chunked]
+
     # ---- form 2: distributed reduce --------------------------------------
     if isinstance(expr, P.Reduce) and expr.level.kind == "mesh":
         ax = expr.level.axis
@@ -91,9 +100,10 @@ def compile_expr_shardmap(expr: P.Phrase, arg_vars: Sequence[P.Var],
             raise MeshFormError(
                 f"split yields {d_in.n} blocks but axis {ax!r} has {nshards}")
         local_e, pairs = _chunk_expr(split.e, split.n)
+        extras = extras_of(pairs)
         blk = P.Var(P.fresh("blk"), ExpT(Arr(split.n, _elem(split))))
         per_block = inner_map.f(blk)
-        local_vars = [lv for _, lv in pairs] + [blk]
+        local_vars = [lv for _, lv in pairs] + extras + [blk]
         local_fn = compile_inner(per_block, local_vars)
 
         def chunk_fn(*locs):
@@ -101,18 +111,19 @@ def compile_expr_shardmap(expr: P.Phrase, arg_vars: Sequence[P.Var],
             return interp(local_e, {lv.name: lo for (_, lv), lo
                                     in zip(pairs, locs)})
 
-        in_specs = tuple(PS(ax) for _ in pairs)
+        in_specs = tuple(PS(ax) for _ in pairs) + tuple(PS() for _ in extras)
         out_specs = PS()
 
-        def shard_fn(*locs):
+        def shard_fn(*args_in):
+            locs, reps = args_in[:len(pairs)], args_in[len(pairs):]
             chunk = chunk_fn(*locs)
-            part = local_fn(*(list(locs) + [chunk]))
+            part = local_fn(*(list(locs) + list(reps) + [chunk]))
             return jax.lax.psum(part, ax) if op == "add" \
                 else jax.lax.pmax(part, ax)
 
         sm = shard_map(shard_fn, mesh=mesh, in_specs=in_specs,
                        out_specs=out_specs, check_rep=False)
-        order = [v.name for v, _ in pairs]
+        order = [v.name for v, _ in pairs] + [v.name for v in extras]
 
         def fn(*args):
             env = dict(zip(names, args))
@@ -133,28 +144,31 @@ def compile_expr_shardmap(expr: P.Phrase, arg_vars: Sequence[P.Var],
             raise MeshFormError(
                 f"split yields {d_in.n} blocks but axis {ax!r} has {nshards}")
         local_e, pairs = _chunk_expr(split.e, split.n)
+        extras = extras_of(pairs)
         blk = P.Var(P.fresh("blk"), ExpT(Arr(split.n, _elem(split))))
         per_block = body_e.f(blk)
-        local_fn = compile_inner(per_block, [lv for _, lv in pairs] + [blk])
+        local_fn = compile_inner(
+            per_block, [lv for _, lv in pairs] + extras + [blk])
 
         def chunk_fn(*locs):
             from .interp import interp
             return interp(local_e, {lv.name: lo for (_, lv), lo
                                     in zip(pairs, locs)})
 
-        in_specs = tuple(PS(ax) for _ in pairs)
+        in_specs = tuple(PS(ax) for _ in pairs) + tuple(PS() for _ in extras)
         out_specs = PS(ax)
 
-        def shard_fn(*locs):
+        def shard_fn(*args_in):
+            locs, reps = args_in[:len(pairs)], args_in[len(pairs):]
             chunk = chunk_fn(*locs)
-            out = local_fn(*(list(locs) + [chunk]))
+            out = local_fn(*(list(locs) + list(reps) + [chunk]))
             if not joined:
                 out = jax.tree_util.tree_map(lambda l: l[None], out)
             return out
 
         sm = shard_map(shard_fn, mesh=mesh, in_specs=in_specs,
                        out_specs=out_specs, check_rep=False)
-        order = [v.name for v, _ in pairs]
+        order = [v.name for v, _ in pairs] + [v.name for v in extras]
 
         def fn(*args):
             env = dict(zip(names, args))

@@ -4,10 +4,15 @@ Every op has interchangeable implementations, selected per call (``impl=``),
 per scope (``with repro.compiler.options(backend=...):``, thread-local), or
 per explicit ``options=repro.compiler.CompileOptions(...)``:
 
-  'xla'         — plain jnp (XLA fuses/lowers; default for dry-run & CPU)
-  'pallas'      — hand-written Pallas kernel (TPU target; interpret on CPU)
-  'dpia-jnp'    — DPIA strategy compiled through the formal pipeline, jnp
-  'dpia-pallas' — DPIA strategy compiled to Pallas kernels
+  'xla'           — plain jnp (XLA fuses/lowers; default for dry-run & CPU)
+  'pallas'        — hand-written Pallas kernel (TPU target; interpret on CPU)
+  'dpia-jnp'      — DPIA strategy compiled through the formal pipeline, jnp
+  'dpia-pallas'   — DPIA strategy compiled to Pallas kernels
+  'dpia-shardmap' — mesh-level DPIA strategy (repro.mesh) compiled to
+                    shard_map + collectives; the mesh comes from
+                    ``options(mesh=...)`` or the process mesh context, and
+                    ops fall back to the single-device dpia-jnp path (with
+                    a one-shot warning) when no mesh axis fits
 
 Dispatch is table-driven: each op registers one handler per impl name, so
 the impl matrix is *data* (``_OP_IMPLS``) derived from the
@@ -115,19 +120,22 @@ def _tuned(kernel: str, backend: str, opts: CompileOptions,
     """Tuned params for the kernel at this shape, or None (use defaults).
 
     Steady state is one dict lookup (per-process memo); a cold shape costs
-    one analytic ranking pass via the tuner's persistent cache.  A failing
-    lookup falls back to the defaults *and warns once per kernel/backend* —
-    a broken tuning cache should be diagnosable, not an invisible perf
-    regression."""
+    one analytic ranking pass via the tuner's persistent cache.  The lookup
+    passes the *actual* mesh descriptor (``opts.mesh_descriptor()``), so
+    params tuned on one mesh are never silently shared with another.  A
+    failing lookup falls back to the defaults *and warns once per
+    kernel/backend* — a broken tuning cache should be diagnosable, not an
+    invisible perf regression."""
     if not opts.autotune:
         return None
-    memo_key = (kernel, backend, _cache_token(opts.tuning_cache),
+    mesh_desc = opts.mesh_descriptor()
+    memo_key = (kernel, backend, mesh_desc, _cache_token(opts.tuning_cache),
                 tuple(sorted(shape.items())))
     if memo_key in _tuned_memo:
         return _tuned_memo[memo_key]
     from repro import autotune
     try:
-        params = autotune.get_tuned(kernel, backend=backend,
+        params = autotune.get_tuned(kernel, backend=backend, mesh=mesh_desc,
                                     cache=opts.tuning_cache, **shape)
     except Exception as e:  # never let tuning break the op itself
         params = None
@@ -199,6 +207,72 @@ def _tuned_or_default(kernel: str, backend: str, opts: CompileOptions,
 
 
 # ---------------------------------------------------------------------------
+# mesh-level dispatch (the 'dpia-shardmap' impl; see repro.mesh)
+# ---------------------------------------------------------------------------
+
+_MESH_OPS = ("dot", "asum", "scal", "matmul", "rmsnorm", "softmax")
+
+
+def _mesh_compiled(kernel: str, shape: Dict[str, int], opts: CompileOptions,
+                   mesh_obj, extra_params: Optional[Dict[str, object]] = None
+                   ) -> compiler.CompiledKernel:
+    """Executor for the mesh placement of ``kernel`` on ``mesh_obj``.
+
+    Placement params come from the tuner's mesh space (keyed by the real
+    mesh descriptor), else the default placement; the executor cache key
+    carries the descriptor so meshes never share artefacts.  Mesh programs
+    skip Stage I->II (shard_map consumes the functional term; the per-shard
+    bodies are checked by the inner backend)."""
+    from repro import mesh as mesh_mod
+    desc = mesh_mod.descriptor(mesh_obj)
+    axes = mesh_mod.parse_descriptor(desc)
+    params = _tuned(kernel, "shardmap", opts, **shape)
+    if params is None or params.get("mesh_axis") is None:
+        params = mesh_mod.default_mesh_params(kernel, axes, **shape)
+    build_shape = dict(shape, **(extra_params or {}))
+    key_params = dict(params, **(extra_params or {}))
+
+    def build(params=params):
+        cand = mesh_mod.mesh_candidate_from_params(
+            kernel, params, axes, **build_shape)
+        prog = compiler.Program.from_builder(
+            cand.build, name=kernel, kernel=kernel, shape=shape)
+        return prog.compile("shardmap", options=opts, mesh=mesh_obj)
+
+    key = _executors.make_key(kernel, shape, "shardmap", params=key_params,
+                              mesh=desc, interpret=bool(opts.interpret),
+                              jit=bool(opts.jit))
+    return compiler.executor_cache().get_or_compile(
+        key, build, meta={"interpret": bool(opts.interpret),
+                          "jit": bool(opts.jit)})
+
+
+def _mesh_or_none(kernel: str, opts: CompileOptions, shape: Dict[str, int],
+                  extra_params: Optional[Dict[str, object]] = None
+                  ) -> Optional[compiler.CompiledKernel]:
+    """The dpia-shardmap op path, or None when the op must fall back to the
+    single-device pipeline (no mesh in scope / no axis divides the extent /
+    a malformed cache entry).  Falling back warns once per kernel so a
+    sharding misconfiguration is diagnosable, not silent."""
+    mesh_obj = opts.resolved_mesh()
+    if mesh_obj is None:
+        _warn_once(("mesh", kernel, "nomesh"),
+                   f"{kernel}: impl 'dpia-shardmap' selected but no mesh is "
+                   f"in scope (options(mesh=...) / sharding.ctx.set_mesh); "
+                   f"using the single-device dpia-jnp path")
+        return None
+    try:
+        return _mesh_compiled(kernel, shape, opts, mesh_obj, extra_params)
+    except Exception as e:
+        _warn_once(("mesh", kernel, "fallback"),
+                   f"{kernel}: mesh placement on "
+                   f"{getattr(mesh_obj, 'shape', mesh_obj)} failed "
+                   f"({type(e).__name__}: {e}); using the single-device "
+                   f"dpia-jnp path")
+        return None
+
+
+# ---------------------------------------------------------------------------
 # warm-up: stage the executors a serving engine will hit, without running them
 # ---------------------------------------------------------------------------
 
@@ -212,6 +286,17 @@ def warm_kernel(kernel: str, *, backend: str | None = None,
     the result with ``repro.compiler.executor_cache().save_aot(dir)``."""
     opts = options if options is not None else current_options()
     b = backend or opts.dpia_backend
+    if b == "shardmap":
+        mesh_obj = opts.resolved_mesh()
+        if mesh_obj is not None and kernel in _MESH_OPS:
+            shape_d = {k: v for k, v in shape.items() if k != "eps"}
+            extra = ({"eps": shape.get("eps", 1e-6)}
+                     if kernel == "rmsnorm" else None)
+            try:
+                return _mesh_compiled(kernel, shape_d, opts, mesh_obj, extra)
+            except Exception:
+                pass  # unshardable shape: warm the single-device path
+        b = "jnp"
     if kernel in ("dot", "asum", "scal"):
         return _tuned_or_default(kernel, b, opts, dict(shape))
     if kernel == "gemv":
@@ -284,6 +369,14 @@ def _scal_dpia(impl, opts, alpha, x):
     return fn(jnp.asarray(alpha, x.dtype), x)
 
 
+@_impl_handler("scal", "dpia-shardmap")
+def _scal_mesh(impl, opts, alpha, x):
+    fn = _mesh_or_none("scal", opts, dict(n=x.shape[0]))
+    if fn is None:
+        return _scal_dpia("dpia-jnp", opts, alpha, x)
+    return fn(jnp.asarray(alpha, x.dtype), x)
+
+
 def asum(x, impl: str | None = None, options: CompileOptions | None = None):
     return _dispatch("asum", impl, options, x)
 
@@ -300,6 +393,12 @@ def _asum_dpia(impl, opts, x):
     return fn(x)
 
 
+@_impl_handler("asum", "dpia-shardmap")
+def _asum_mesh(impl, opts, x):
+    fn = _mesh_or_none("asum", opts, dict(n=x.shape[0]))
+    return fn(x) if fn is not None else _asum_dpia("dpia-jnp", opts, x)
+
+
 def dot(x, y, impl: str | None = None, options: CompileOptions | None = None):
     return _dispatch("dot", impl, options, x, y)
 
@@ -314,6 +413,12 @@ def _dot_dpia(impl, opts, x, y):
     fn = _tuned_or_default("dot", _dpia_backend(impl), opts,
                            dict(n=x.shape[0]))
     return fn(x, y)
+
+
+@_impl_handler("dot", "dpia-shardmap")
+def _dot_mesh(impl, opts, x, y):
+    fn = _mesh_or_none("dot", opts, dict(n=x.shape[0]))
+    return fn(x, y) if fn is not None else _dot_dpia("dpia-jnp", opts, x, y)
 
 
 def gemv(a, x, impl: str | None = None, options: CompileOptions | None = None):
@@ -335,6 +440,12 @@ def _gemv_compiled(backend: str, opts: CompileOptions, m: int, n: int):
 def _gemv_dpia(impl, opts, a, x):
     fn = _gemv_compiled(_dpia_backend(impl), opts, *a.shape)
     return fn(a, x)
+
+
+@_impl_handler("gemv", "dpia-shardmap")
+def _gemv_mesh(impl, opts, a, x):
+    # gemv has no mesh strategy yet: the row-blocked single-device path
+    return _gemv_dpia("dpia-jnp", opts, a, x)
 
 
 # ---- transformer ops ---------------------------------------------------------
@@ -376,6 +487,15 @@ def _matmul_dpia(impl, opts, a, b, out_dtype=None):
     return fn(a, b).astype(out_dtype or a.dtype)
 
 
+@_impl_handler("matmul", "dpia-shardmap")
+def _matmul_mesh(impl, opts, a, b, out_dtype=None):
+    m, k = a.shape
+    fn = _mesh_or_none("matmul", opts, dict(m=m, k=k, n=b.shape[1]))
+    if fn is None:
+        return _matmul_dpia("dpia-jnp", opts, a, b, out_dtype=out_dtype)
+    return fn(a, b).astype(out_dtype or a.dtype)
+
+
 def rmsnorm(x, w, eps: float = 1e-6, impl: str | None = None,
             options: CompileOptions | None = None):
     return _dispatch("rmsnorm", impl, options, x, w, eps=eps)
@@ -414,6 +534,18 @@ def _rmsnorm_dpia(impl, opts, x, w, eps=1e-6):
               w.astype(jnp.float32)).reshape(x.shape).astype(x.dtype)
 
 
+@_impl_handler("rmsnorm", "dpia-shardmap")
+def _rmsnorm_mesh(impl, opts, x, w, eps=1e-6):
+    d = x.shape[-1]
+    x2 = x.reshape(-1, d)
+    fn = _mesh_or_none("rmsnorm", opts, dict(rows=x2.shape[0], d=d),
+                       extra_params={"eps": eps})
+    if fn is None:
+        return _rmsnorm_dpia("dpia-jnp", opts, x, w, eps=eps)
+    return fn(x2.astype(jnp.float32),
+              w.astype(jnp.float32)).reshape(x.shape).astype(x.dtype)
+
+
 def softmax(x, axis: int = -1, impl: str | None = None,
             options: CompileOptions | None = None):
     return _dispatch("softmax", impl, options, x, axis=axis)
@@ -445,6 +577,18 @@ def _softmax_dpia(impl, opts, x, axis=-1):
     return fn(x2.astype(jnp.float32)).reshape(x.shape).astype(x.dtype)
 
 
+@_impl_handler("softmax", "dpia-shardmap")
+def _softmax_mesh(impl, opts, x, axis=-1):
+    if x.ndim < 2 or axis not in (-1, x.ndim - 1):
+        return ref.softmax(x, axis=axis)  # DPIA path covers row softmax only
+    d = x.shape[-1]
+    x2 = x.reshape(-1, d)
+    fn = _mesh_or_none("softmax", opts, dict(rows=x2.shape[0], d=d))
+    if fn is None:
+        return _softmax_dpia("dpia-jnp", opts, x, axis=axis)
+    return fn(x2.astype(jnp.float32)).reshape(x.shape).astype(x.dtype)
+
+
 def flash_attention(q, k, v, *, causal: bool = True, scale=None,
                     q_offset: int = 0, impl: str | None = None,
                     options: CompileOptions | None = None):
@@ -452,7 +596,8 @@ def flash_attention(q, k, v, *, causal: bool = True, scale=None,
                      causal=causal, scale=scale, q_offset=q_offset)
 
 
-@_impl_handler("flash_attention", "xla", "dpia-jnp", "dpia-pallas")
+@_impl_handler("flash_attention", "xla", "dpia-jnp", "dpia-pallas",
+               "dpia-shardmap")
 def _fa_ref(impl, opts, q, k, v, *, causal=True, scale=None, q_offset=0):
     # no DPIA flash-attention strategy yet: dpia-* impls use the reference
     return ref.flash_attention(q, k, v, causal=causal, scale=scale,

@@ -1,0 +1,43 @@
+"""repro.mesh — first-class mesh strategies.
+
+The paper treats the parallelisation strategy as a typed object preserved
+through compilation; this package extends that object to the *mesh* level
+and makes the placement a tunable dimension end to end:
+
+  strategy — :class:`MeshStrategy` (which map/reduce binds to which named
+             mesh axis, validated against ``jax.sharding.Mesh`` shapes) and
+             the canonical mesh :func:`descriptor` every tuning/executor
+             cache key carries (``"single"`` / ``"data=8"`` / ...)
+  kernels  — mesh-level DPIA strategy builders for the tuned kernel set
+             (dot/asum/scal via mesh reduce; scal/rmsnorm/softmax/matmul via
+             mesh map with replicated small operands)
+  space    — mesh-axis candidate enumeration (which axis, per-shard chunk
+             factor) over a descriptor's axis sizes, ranked by the
+             collective-aware roofline in ``repro.autotune.cost``
+
+Consumers: ``compiler.options(mesh=...)`` scopes the mesh, ``kernels.ops``
+dispatches ``dpia-shardmap`` impls through it, ``repro.autotune`` keys its
+cache by the descriptor, and ``serve.ShardedEngine`` shards the decode slot
+axis over ``data``.  See docs/distributed.md.
+"""
+from . import kernels, space, strategy  # noqa: F401
+from .kernels import (  # noqa: F401
+    MESH_KERNELS, mesh_asum, mesh_dot, mesh_matmul, mesh_rmsnorm, mesh_scal,
+    mesh_softmax,
+)
+from .space import (  # noqa: F401
+    default_mesh_params, mesh_candidate_from_params, mesh_extent, mesh_space,
+)
+from .strategy import (  # noqa: F401
+    SINGLE, MeshStrategy, current_descriptor, descriptor, parse_descriptor,
+    resolve_mesh,
+)
+
+__all__ = [
+    "MeshStrategy", "descriptor", "parse_descriptor", "current_descriptor",
+    "resolve_mesh", "SINGLE",
+    "mesh_dot", "mesh_asum", "mesh_scal", "mesh_rmsnorm", "mesh_softmax",
+    "mesh_matmul", "MESH_KERNELS",
+    "mesh_space", "default_mesh_params", "mesh_candidate_from_params",
+    "mesh_extent",
+]

@@ -1,0 +1,154 @@
+"""MeshStrategy — mesh placement as a first-class, cache-keyable strategy.
+
+The paper's hierarchy assigns every ``map``/``reduce`` a level (lanes, grid,
+...); our Stage III shardmap backend extends it to the *mesh* level
+(``map[mesh(ax)]`` -> ``shard_map``, ``reduce[mesh(ax)]`` -> ``psum``).  This
+module makes that placement declarative:
+
+  * :class:`MeshStrategy` records which distributed level a kernel's top
+    map/reduce binds to which **named mesh axis**, validated against a
+    concrete ``jax.sharding.Mesh`` shape;
+  * :func:`descriptor` renders a mesh as a canonical string
+    (``"single"`` / ``"data=8"`` / ``"pod=2,data=16,model=16"``) — the mesh
+    component of the tuning-cache and executor-cache keys, so artefacts
+    tuned or compiled for different meshes can never be confused;
+  * :func:`parse_descriptor` inverts it, so the autotuner can enumerate
+    mesh-axis candidates from a descriptor alone (no devices needed).
+
+Nothing here imports repro.compiler or repro.autotune at module level — the
+strategy layer stays dependency-free so both can import it.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, Optional, Tuple
+
+__all__ = ["MeshStrategy", "descriptor", "parse_descriptor",
+           "current_descriptor", "resolve_mesh", "SINGLE"]
+
+SINGLE = "single"
+
+
+# ---------------------------------------------------------------------------
+# canonical mesh descriptors (cache keys)
+# ---------------------------------------------------------------------------
+
+def descriptor(mesh) -> str:
+    """Canonical string form of a mesh: ``"single"`` for None, else the
+    axis-order ``name=size`` list (``"data=8"``, ``"data=2,model=4"``).
+
+    Axis *order* is part of the descriptor — two meshes with the same axis
+    sizes in a different device order are different placement targets.
+    Accepts a Mesh, an already-rendered descriptor string, or None.
+    """
+    if mesh is None:
+        return SINGLE
+    if isinstance(mesh, str):
+        return mesh or SINGLE
+    shape = getattr(mesh, "shape", None)
+    if shape is None:
+        raise TypeError(f"descriptor: expected a jax Mesh, a descriptor "
+                        f"string, or None, got {type(mesh).__name__}")
+    if not len(shape):
+        return SINGLE
+    return ",".join(f"{a}={int(s)}" for a, s in shape.items())
+
+
+def parse_descriptor(desc: str) -> Dict[str, int]:
+    """Axis name -> size for a :func:`descriptor` string ({} for "single")."""
+    if not desc or desc == SINGLE:
+        return {}
+    out: Dict[str, int] = {}
+    for part in desc.split(","):
+        name, _, size = part.partition("=")
+        if not name or not size:
+            raise ValueError(f"parse_descriptor: malformed component "
+                             f"{part!r} in {desc!r}")
+        out[name] = int(size)
+    return out
+
+
+def resolve_mesh(mesh=None):
+    """The concrete Mesh to compile against: an explicit argument wins, then
+    the active ``compiler.options(mesh=...)`` scope, then the process mesh
+    context (``repro.sharding.ctx``).  Returns None when single-device."""
+    if mesh is not None:
+        return mesh
+    from repro.compiler import current_options
+    opt_mesh = getattr(current_options(), "mesh", None)
+    if opt_mesh is not None:
+        return opt_mesh
+    from repro.sharding import ctx
+    return ctx.get_mesh()
+
+
+def current_descriptor(mesh=None) -> str:
+    """Descriptor of :func:`resolve_mesh` — what cache keys should carry."""
+    return descriptor(resolve_mesh(mesh))
+
+
+# ---------------------------------------------------------------------------
+# MeshStrategy
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class MeshStrategy:
+    """One mesh-level placement decision for a kernel.
+
+    axis     named mesh axis the distributed map/reduce binds to
+    op       "map"    — output stays sharded over ``axis`` (gathered by the
+                        Join re-view; scal/rmsnorm/softmax/matmul row shard)
+             "reduce" — per-shard partials are combined by one mesh reduce
+                        (``lax.psum``; dot/asum)
+    extent   the logical extent being sharded (n, rows, or m) — recorded so
+             validation can check divisibility without re-deriving it
+    """
+    axis: str
+    op: str = "map"
+    extent: Optional[int] = None
+
+    def __post_init__(self):
+        if self.op not in ("map", "reduce"):
+            raise ValueError(f"MeshStrategy.op must be 'map' or 'reduce', "
+                             f"got {self.op!r}")
+
+    # -- validation ----------------------------------------------------------
+
+    def shards(self, mesh) -> int:
+        """Number of shards the bound axis provides on ``mesh``."""
+        axes = mesh if isinstance(mesh, dict) else dict(mesh.shape)
+        if self.axis not in axes:
+            raise ValueError(
+                f"mesh axis {self.axis!r} not in mesh {sorted(axes)}")
+        return int(axes[self.axis])
+
+    def validate(self, mesh) -> "MeshStrategy":
+        """Check this placement against a Mesh (or axis->size dict): the axis
+        must exist and the sharded extent must divide evenly.  Fluent."""
+        size = self.shards(mesh)
+        if self.extent is not None and self.extent % size != 0:
+            raise ValueError(
+                f"extent {self.extent} not divisible by mesh axis "
+                f"{self.axis!r} of size {size}")
+        return self
+
+    # -- canonical forms -----------------------------------------------------
+
+    def describe(self) -> str:
+        """``map[mesh(data)]`` / ``reduce[mesh(data)]`` — the strategy level
+        this placement assigns, in the paper's level-annotation notation."""
+        return f"{self.op}[mesh({self.axis})]"
+
+    def params(self) -> Dict[str, object]:
+        """The tuning-space params fragment this placement contributes."""
+        return {"mesh_axis": self.axis}
+
+    @classmethod
+    def from_params(cls, params: Dict[str, object], *, op: str = "map",
+                    extent: Optional[int] = None) -> Optional["MeshStrategy"]:
+        """Rebuild from a tuned params dict; None when the params carry no
+        mesh placement (a single-device candidate)."""
+        ax = params.get("mesh_axis")
+        if ax is None:
+            return None
+        return cls(axis=str(ax), op=op, extent=extent)

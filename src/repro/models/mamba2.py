@@ -73,8 +73,13 @@ def _split_proj(cfg, proj):
 
 
 def forward(p: Mamba2Params, cfg: ModelConfig, x,
-            state: Mamba2State = None):
-    """Full-sequence forward; returns (y, final_state)."""
+            state: Mamba2State = None, lengths=None):
+    """Full-sequence forward; returns (y, final_state).
+
+    ``lengths`` ((b,) int32, optional) marks the real prompt length per row
+    of a RIGHT-padded batch: conv-tail and SSM state updates are masked off
+    at padded positions, so the returned state is bitwise the state of the
+    unpadded sequence (padding invariance for the recurrent path)."""
     b, s, d = x.shape
     din, nheads, n = dims(cfg)
     fresh = state is None
@@ -97,7 +102,16 @@ def forward(p: Mamba2Params, cfg: ModelConfig, x,
                * jax.lax.dynamic_slice_in_dim(xbc_ext, i, s, axis=1)
                for i in range(CONV_W))
     conv = jax.nn.silu(conv)
-    new_conv_tail = xbc_ext[:, -(CONV_W - 1):, :]
+    if lengths is None:
+        new_conv_tail = xbc_ext[:, -(CONV_W - 1):, :]
+    else:
+        # last CONV_W-1 REAL positions: row i's real tokens occupy ext
+        # positions [CONV_W-1, CONV_W-1 + lengths[i]), so its tail starts
+        # at ext position lengths[i]
+        idx = (jnp.asarray(lengths, jnp.int32)[:, None]
+               + jnp.arange(CONV_W - 1)[None, :])
+        new_conv_tail = jnp.take_along_axis(
+            xbc_ext, idx[:, :, None], axis=1)
 
     xs_, bc = jnp.split(conv, [din], axis=-1)
     b_in, c_in = jnp.split(bc, 2, axis=-1)                  # (b, s, N) each
@@ -110,17 +124,21 @@ def forward(p: Mamba2Params, cfg: ModelConfig, x,
     xh = xs_.reshape(b, s, nheads, HD).astype(jnp.float32)
 
     def step(h, inp):
-        xh_t, b_t, c_t, da_t, dt_t = inp
-        h = h * da_t[..., None, None] + (
+        xh_t, b_t, c_t, da_t, dt_t, m_t = inp
+        h_new = h * da_t[..., None, None] + (
             (dt_t[..., None] * xh_t)[..., None] * b_t[:, None, None, :])
+        h = jnp.where(m_t[:, None, None, None], h_new, h)
         y = jnp.einsum("bhdn,bn->bhd", h, c_t)
         return h, y
 
+    mask = (jnp.arange(s)[None, :] < jnp.asarray(lengths, jnp.int32)[:, None]
+            if lengths is not None else jnp.ones((b, s), bool))
     seq = (xh.transpose(1, 0, 2, 3),
            b_in.astype(jnp.float32).transpose(1, 0, 2),
            c_in.astype(jnp.float32).transpose(1, 0, 2),
            da.transpose(1, 0, 2),
-           dt.transpose(1, 0, 2))
+           dt.transpose(1, 0, 2),
+           mask.transpose(1, 0))
     if fresh:  # sharding-inheriting zero state (see above)
         ssm0 = (xh[:, 0, :, :, None]
                 * b_in.astype(jnp.float32)[:, 0, None, None, :]) * 0

@@ -84,9 +84,27 @@ def init_state(cfg: ModelConfig, batch: int) -> Rwkv6State:
         wkv=jnp.zeros((batch, nh, HD, HD), jnp.float32))
 
 
-def time_mix(p: Rwkv6Params, cfg: ModelConfig, x, state: Rwkv6State = None):
+def _len_mask(lengths, b, s):
+    """(b, s) bool: True at real-token positions of a RIGHT-padded batch."""
+    return jnp.arange(s)[None, :] < jnp.asarray(lengths, jnp.int32)[:, None]
+
+
+def _last_real(x, lengths):
+    """x[:, lengths-1, :] — the last REAL token per row (right padding)."""
+    idx = jnp.clip(jnp.asarray(lengths, jnp.int32) - 1, 0, x.shape[1] - 1)
+    return jnp.take_along_axis(x, idx[:, None, None], axis=1)[:, 0]
+
+
+def time_mix(p: Rwkv6Params, cfg: ModelConfig, x, state: Rwkv6State = None,
+             lengths=None):
     """x: (b, s, d) -> (y, new_state pieces).  state=None => fresh sequence
-    (zero states derived from x so they inherit x's sharding)."""
+    (zero states derived from x so they inherit x's sharding).
+
+    ``lengths`` ((b,) int32, optional) marks the real prompt length per row
+    of a RIGHT-padded batch: wkv state updates are masked off at padded
+    positions and the returned token-shift is the last *real* token, so the
+    state after a padded prefill is bitwise the unpadded state (padding
+    invariance for the recurrent family)."""
     b, s, d = x.shape
     nh = nheads(cfg)
     tshift0 = x[:, 0, :] * 0 if state is None else state.tshift
@@ -109,13 +127,17 @@ def time_mix(p: Rwkv6Params, cfg: ModelConfig, x, state: Rwkv6State = None):
     wh = w.reshape(b, s, nh, HD)
 
     def step(S, inp):
-        r_t, k_t, v_t, w_t = inp                           # (b, nh, hd)
+        r_t, k_t, v_t, w_t, m_t = inp                      # (b, nh, hd) / (b,)
         kv = k_t[..., :, None] * v_t[..., None, :]         # (b, nh, hd, hd)
         o = jnp.einsum("bhi,bhij->bhj", r_t, S + p.u[..., None] * kv)
-        S = w_t[..., :, None] * S + kv
+        S_new = w_t[..., :, None] * S + kv
+        S = jnp.where(m_t[:, None, None, None], S_new, S)
         return S, o
 
+    mask = (_len_mask(lengths, b, s) if lengths is not None
+            else jnp.ones((b, s), bool))
     seq = tuple(a.transpose(1, 0, 2, 3) for a in (rh, kh, vh, wh))
+    seq = seq + (mask.transpose(1, 0),)
     if state is None:  # sharding-inheriting zero state
         wkv0 = (kh[:, 0][..., :, None] * vh[:, 0][..., None, :]) * 0
     else:
@@ -123,10 +145,12 @@ def time_mix(p: Rwkv6Params, cfg: ModelConfig, x, state: Rwkv6State = None):
     S_final, os = jax.lax.scan(step, wkv0, seq)
     y = os.transpose(1, 0, 2, 3).reshape(b, s, d).astype(x.dtype)
     y = jnp.einsum("bsd,de->bse", y, p.w_o)
-    return y, x[:, -1, :], S_final
+    tshift = x[:, -1, :] if lengths is None else _last_real(x, lengths)
+    return y, tshift, S_final
 
 
-def channel_mix(p: Rwkv6Params, cfg: ModelConfig, x, state: Rwkv6State = None):
+def channel_mix(p: Rwkv6Params, cfg: ModelConfig, x, state: Rwkv6State = None,
+                lengths=None):
     cshift0 = x[:, 0, :] * 0 if state is None else state.cshift
     prev = jnp.concatenate([cshift0[:, None, :], x[:, :-1, :]], axis=1)
     xr = x + (prev - x) * p.cmix_r
@@ -134,7 +158,8 @@ def channel_mix(p: Rwkv6Params, cfg: ModelConfig, x, state: Rwkv6State = None):
     r = jax.nn.sigmoid(jnp.einsum("bsd,de->bse", xr, p.cw_r))
     k = jnp.einsum("bsd,df->bsf", xk, p.cw_k)
     k = jnp.square(jax.nn.relu(k))
-    return r * jnp.einsum("bsf,fd->bsd", k, p.cw_v), x[:, -1, :]
+    cshift = x[:, -1, :] if lengths is None else _last_real(x, lengths)
+    return r * jnp.einsum("bsf,fd->bsd", k, p.cw_v), cshift
 
 
 def forward(p: Rwkv6Params, cfg: ModelConfig, x, state: Rwkv6State = None

@@ -91,13 +91,14 @@ def _init_rwkv_block(key, cfg: ModelConfig) -> RwkvBlockParams:
 
 
 def _rwkv_block_fwd(p: RwkvBlockParams, cfg: ModelConfig, x,
-                    state: rwkv_mod.Rwkv6State):
+                    state: rwkv_mod.Rwkv6State, lengths=None):
     from .common import rmsnorm
     xn = rmsnorm(x, p.ln1, cfg.norm_eps)
-    tm, tshift, wkv = rwkv_mod.time_mix(p.mix, cfg, xn, state)
+    tm, tshift, wkv = rwkv_mod.time_mix(p.mix, cfg, xn, state,
+                                        lengths=lengths)
     h = x + tm
     hn = rmsnorm(h, p.ln2, cfg.norm_eps)
-    cm, cshift = rwkv_mod.channel_mix(p.mix, cfg, hn, state)
+    cm, cshift = rwkv_mod.channel_mix(p.mix, cfg, hn, state, lengths=lengths)
     new_state = rwkv_mod.Rwkv6State(tshift, cshift, wkv)
     return h + cm, new_state
 
@@ -257,9 +258,13 @@ class Model:
         ``lengths`` ((b,) int32) marks the real prompt length per row for
         RIGHT-padded batches: logits are gathered at ``lengths - 1`` instead
         of the final position, so bucket padding on the right never leaks
-        into the returned next-token distribution (for attention families a
+        into the returned next-token distribution.  For attention families a
         right-padded prefill is bitwise the unpadded computation — causal
-        masking means real tokens never attend to the padding)."""
+        masking means real tokens never attend to the padding; for the
+        recurrent families (ssm/hybrid) the state updates past ``lengths``
+        are masked off (rwkv6.time_mix / mamba2.forward), so the returned
+        cache is ALSO the unpadded cache and padded prefill is
+        padding-invariant across every family."""
         cfg = self.cfg
         x = self.embed(params, tokens)
         b, s = x.shape[:2]
@@ -270,7 +275,8 @@ class Model:
             def body(carry, layer_and_state):
                 x = carry
                 layer, st = layer_and_state
-                x, new_st = _rwkv_block_fwd(layer, cfg, x, st)
+                x, new_st = _rwkv_block_fwd(layer, cfg, x, st,
+                                            lengths=lengths)
                 return x, new_st
             x, new_states = jax.lax.scan(body, x, (params["blocks"], cache))
             new_cache = new_states
@@ -284,7 +290,8 @@ class Model:
                 def inner(c, l):
                     (mp, ln), st = l
                     y, nst = mamba_mod.forward(
-                        mp, cfg, rmsnorm(c, ln, cfg.norm_eps), st)
+                        mp, cfg, rmsnorm(c, ln, cfg.norm_eps), st,
+                        lengths=lengths)
                     return c + y, nst
                 x, new_mst = jax.lax.scan(inner, x, ((mam, lns), mstates))
                 xa = rmsnorm(x, hp.shared_ln, cfg.norm_eps)

@@ -18,6 +18,10 @@ Two engines share that core:
     power-of-two buckets and the decode batch is always ``slots`` wide, so
     jit sees a small closed set of shapes — zero recompiles after one pass
     over the buckets.
+  * :class:`ShardedEngine` — the same continuous engine with the slot axis
+    sharded over a named mesh axis (``data``): device state carries
+    ``NamedSharding`` placements and GSPMD partitions the identical jitted
+    chunk, so decode runs data-parallel and stays token-identical.
 
 Sampling determinism: each request's PRNG stream is
 ``fold_in(run_key, request_index)`` advanced once per sampled token, so the
@@ -48,8 +52,8 @@ import numpy as np
 from repro.models.transformer import Model
 from repro.serve.scheduler import Scheduler, pick_bucket, seq_buckets
 
-__all__ = ["Request", "BatchedEngine", "ContinuousEngine", "sample",
-           "sample_tokens"]
+__all__ = ["Request", "BatchedEngine", "ContinuousEngine", "ShardedEngine",
+           "sample", "sample_tokens"]
 
 
 # ---------------------------------------------------------------------------
@@ -110,6 +114,17 @@ def _split_keys(keys):
     """Advance a (b, 2) batch of PRNG keys one step: (carry, subkeys)."""
     pairs = jax.vmap(lambda k: jax.random.split(k))(keys)
     return pairs[:, 0], pairs[:, 1]
+
+
+def _slot_axis(big, small) -> Optional[int]:
+    """The slot/batch axis of a cache leaf: the unique axis where the
+    1-slot shape differs from the engine shape (None when slots == 1, i.e.
+    the slot IS the cache).  Works on every cache pytree leaf (dense
+    KVCache, rwkv states, the hybrid mamba+kv dict) — shared by slot
+    insertion and by ShardedEngine's sharding specs so the two can never
+    disagree on which axis is the batch."""
+    return next((i for i, (a, c) in enumerate(zip(big.shape, small.shape))
+                 if a != c), None)
 
 
 # ---------------------------------------------------------------------------
@@ -332,8 +347,10 @@ class ContinuousEngine(_EngineBase):
     warm traffic never recompiles.
 
     Output is token-identical to :class:`BatchedEngine` on the same
-    requests/key: per-request PRNG streams and padding-invariant prefill
-    make the tokens a function of the request alone.
+    requests/key for every model family: per-request PRNG streams and
+    padding-invariant prefill (attention by causal masking, ssm/hybrid by
+    masked recurrent-state updates) make the tokens a function of the
+    request alone.
     """
 
     def __init__(self, model: Model, params, max_seq: int = 512,
@@ -368,12 +385,10 @@ class ContinuousEngine(_EngineBase):
     def _insert_slot(big, small, slot):
         """Insert a batch=1 cache into the engine cache at ``slot``.
 
-        Works on every cache pytree (dense KVCache, rwkv states, the hybrid
-        mamba+kv dict): for each leaf, the batch axis is the unique axis
-        where the 1-slot shape differs from the engine shape."""
+        Works on every cache pytree; per leaf the batch axis comes from
+        :func:`_slot_axis`."""
         def ins(bl, sl):
-            axis = next((i for i, (a, c) in enumerate(zip(bl.shape, sl.shape))
-                         if a != c), None)
+            axis = _slot_axis(bl, sl)
             if axis is None:          # slots == 1: the slot IS the cache
                 return sl.astype(bl.dtype)
             start = [jnp.int32(0)] * bl.ndim
@@ -470,3 +485,98 @@ class ContinuousEngine(_EngineBase):
         self.top_ks = self.top_ks.at[slot].set(top_k[0])
         # one tiny host sync per ADMISSION (not per token): the first token
         return self.sched.record_first(slot, int(np.asarray(first)[0]))
+
+
+# ---------------------------------------------------------------------------
+# sharded continuous batching (data-parallel slots over a mesh axis)
+# ---------------------------------------------------------------------------
+
+class ShardedEngine(ContinuousEngine):
+    """Continuous batching with the slot axis sharded over a named mesh axis
+    (``data`` by default) — the multi-host serving driver from the ROADMAP.
+
+    The decode state (KV cache, token/pos/key/temp buffers) lives sharded
+    over the mesh via ``NamedSharding``; params are replicated once at
+    build time.  The fused decode chunk is the *same* jitted function as
+    :class:`ContinuousEngine` — GSPMD partitions it over the batch axis, so
+    each device decodes ``slots / mesh.shape[axis]`` lanes and no collective
+    appears in the hot loop (per-request work never crosses shards).  That
+    also makes the engine token-identical to the unsharded
+    :class:`ContinuousEngine`: the per-row computation is bitwise the same,
+    only its placement changes — strategy preservation at the serving level.
+
+    Admission prefill still runs batch=1 (replicated) and inserts the slot
+    cache into the sharded engine cache; shapes and shardings are closed
+    after one pass over the prompt buckets, so warm traffic never
+    recompiles (``decode_cache_misses()`` stays at 1).
+    """
+
+    def __init__(self, model: Model, params, max_seq: int = 512,
+                 slots: int = 8, chunk: int = 8, min_bucket: int = 16,
+                 tuning_cache=None, batch_sizes=None, aot="auto",
+                 mesh=None, mesh_axis: str = "data"):
+        from repro.sharding import ctx
+        mesh = mesh if mesh is not None else ctx.get_mesh()
+        if mesh is None:
+            raise ValueError(
+                "ShardedEngine needs a mesh: pass mesh=... or set the "
+                "process mesh context (repro.sharding.ctx.set_mesh)")
+        if mesh_axis not in mesh.shape:
+            raise ValueError(f"mesh axis {mesh_axis!r} not in mesh axes "
+                             f"{list(mesh.shape)}")
+        n_shards = int(mesh.shape[mesh_axis])
+        if slots % n_shards != 0:
+            raise ValueError(f"slots ({slots}) must be divisible by mesh "
+                             f"axis {mesh_axis!r} of size {n_shards}")
+        self.mesh = mesh
+        self.mesh_axis = mesh_axis
+        super().__init__(model, params, max_seq=max_seq, slots=slots,
+                         chunk=chunk, min_bucket=min_bucket,
+                         tuning_cache=tuning_cache, batch_sizes=batch_sizes,
+                         aot=aot)
+
+    # -- sharded device state ------------------------------------------------
+
+    def _shardings(self):
+        from jax.sharding import NamedSharding, PartitionSpec as PS
+        rep = NamedSharding(self.mesh, PS())
+        row = NamedSharding(self.mesh, PS(self.mesh_axis))
+        return rep, row
+
+    def _cache_sharding(self, big, small):
+        """Per-leaf NamedSharding: the slot axis (:func:`_slot_axis`, the
+        same detection ``_insert_slot`` uses) sharded over the mesh axis,
+        all else replicated."""
+        from jax.sharding import NamedSharding, PartitionSpec as PS
+        axis = _slot_axis(big, small)
+        if axis is None:
+            return NamedSharding(self.mesh, PS())
+        return NamedSharding(
+            self.mesh, PS(*([None] * axis + [self.mesh_axis])))
+
+    def _reset_state(self) -> None:
+        super()._reset_state()
+        rep, row = self._shardings()
+        self.params = jax.device_put(self.params, rep)   # replicate weights
+        small = self.model.init_cache(1, self.max_seq)
+        self.cache = jax.tree_util.tree_map(
+            lambda bl, sl: jax.device_put(bl, self._cache_sharding(bl, sl)),
+            self.cache, small)
+        self._pin_slot_state()
+
+    def _pin_slot_state(self) -> None:
+        """Keep the per-slot vectors on their canonical sharding.  A no-op
+        (no transfer) when already placed — called at chunk boundaries so
+        host-side ``.at[slot].set`` admissions can never drift the decode
+        chunk onto a new sharding signature (which would recompile)."""
+        _, row = self._shardings()
+        self.tokens = jax.device_put(self.tokens, row)
+        self.pos = jax.device_put(self.pos, row)
+        self.keys = jax.device_put(self.keys, row)
+        self.temps = jax.device_put(self.temps, row)
+        self.top_ks = jax.device_put(self.top_ks, row)
+
+    def step_chunk(self):
+        out = super().step_chunk()
+        self._pin_slot_state()
+        return out

@@ -11,6 +11,7 @@ from __future__ import annotations
 from typing import Optional
 
 import jax
+import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as PS
 
 _MESH: Optional[Mesh] = None
@@ -25,19 +26,25 @@ def get_mesh() -> Optional[Mesh]:
     return _MESH
 
 
-def _filter(axis):
-    if axis is None:
+def _filter(axis, mesh: Optional[Mesh] = None):
+    """Drop axis names absent from ``mesh`` (or the context mesh).
+
+    Safe with no mesh set: every name filters to None rather than touching
+    ``_MESH.shape`` on None."""
+    mesh = mesh if mesh is not None else _MESH
+    if axis is None or mesh is None:
         return None
     if isinstance(axis, (tuple, list)):
-        kept = tuple(a for a in axis if a in _MESH.shape)
+        kept = tuple(a for a in axis if a in mesh.shape)
         return kept if kept else None
-    return axis if axis in _MESH.shape else None
+    return axis if axis in mesh.shape else None
 
 
 def dp_axes():
-    if _MESH is None:
+    mesh = _MESH
+    if mesh is None:
         return None
-    kept = tuple(a for a in ("pod", "data") if a in _MESH.shape)
+    kept = tuple(a for a in ("pod", "data") if a in mesh.shape)
     return kept or None
 
 
@@ -47,17 +54,17 @@ def constraint(x, *axes):
     ``axes`` are per-dimension axis names (str / tuple / None); dims not
     divisible by their axis size fall back to None.
     """
-    if _MESH is None:
+    mesh = _MESH  # snapshot: set_mesh(None) mid-call must not crash us
+    if mesh is None:
         return x
     spec = []
     for dim, ax in zip(x.shape, axes):
-        ax = _filter(ax)
+        ax = _filter(ax, mesh)
         if ax is not None:
-            import numpy as np
-            size = int(np.prod([_MESH.shape[a] for a in
+            size = int(np.prod([mesh.shape[a] for a in
                                 (ax if isinstance(ax, tuple) else (ax,))]))
             if dim % size != 0:
                 ax = None
         spec.append(ax)
     return jax.lax.with_sharding_constraint(
-        x, NamedSharding(_MESH, PS(*spec)))
+        x, NamedSharding(mesh, PS(*spec)))

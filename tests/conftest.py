@@ -24,6 +24,39 @@ def rng():
 
 
 @pytest.fixture
+def forced_devices(tmp_path):
+    """Run a Python snippet on a forced N-device CPU platform, subprocess-
+    safe: jax in THIS process is already initialised single-device, and
+    ``--xla_force_host_platform_device_count`` only works if set before jax
+    initialises — so multi-device tests run the snippet in a fresh
+    interpreter with the flag in its environment.  Each run gets an
+    isolated autotune cache under tmp_path.
+
+    Usage::
+
+        r = forced_devices(SCRIPT)            # 8 devices, 600 s timeout
+        assert "OK" in r.stdout, r.stdout + r.stderr
+    """
+    import subprocess
+    import sys
+
+    def run(script: str, n: int = 8, timeout: int = 600, extra_env=None):
+        env = {
+            "PYTHONPATH": "src",
+            "PATH": os.environ.get("PATH", "/usr/bin:/bin"),
+            "HOME": os.environ.get("HOME", "/root"),
+            "JAX_PLATFORMS": "cpu",
+            "XLA_FLAGS": f"--xla_force_host_platform_device_count={n}",
+            "REPRO_AUTOTUNE_CACHE": str(tmp_path / "autotune.json"),
+        }
+        env.update(extra_env or {})
+        return subprocess.run([sys.executable, "-c", script],
+                              capture_output=True, text=True,
+                              timeout=timeout, env=env)
+    return run
+
+
+@pytest.fixture
 def tuning_cache(tmp_path):
     """A fresh, isolated persistent tuning cache."""
     from repro.autotune import TuningCache
