@@ -22,9 +22,12 @@ See docs/autotune.md for the cache format and the strategy-space tables.
 """
 from . import api, cache, cost, measure, space  # noqa: F401
 from .api import (  # noqa: F401
-    TuneResult, autotuned, get_tuned, model_kernel_shapes, tune,
-    warm_for_model,
+    TuneResult, autotuned, get_tuned, model_kernel_shapes, pick_kv_layout,
+    tune, warm_for_model,
 )
 from .cache import TuningCache, default_cache  # noqa: F401
-from .cost import CostEstimate, estimate, xla_cost  # noqa: F401
+from .cost import (  # noqa: F401
+    HW_PRESETS, CostEstimate, HwModel, KvLayoutCost, estimate, hw_model,
+    kv_layout_cost, xla_cost,
+)
 from .space import Candidate, candidate_from_params, default_params, enumerate_space  # noqa: F401

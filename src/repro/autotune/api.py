@@ -60,7 +60,7 @@ def _resolve_cache(cache) -> TuningCache:
 
 
 def tune(spec: Spec, *, backend: str = "jnp", dtype: str = "float32",
-         mesh=None, cache=None, measure: bool = True,
+         mesh=None, layout: str = "dense", cache=None, measure: bool = True,
          top_k: int = 4, iters: int = 5, force: bool = False,
          verify: bool = False, arg_vars: Optional[List[P.Var]] = None,
          **shape) -> TuneResult:
@@ -82,6 +82,11 @@ def tune(spec: Spec, *, backend: str = "jnp", dtype: str = "float32",
     the search space is the mesh-placement space (which axis, per-shard
     chunk factor; ``repro.mesh.space``) ranked by the collective-aware cost
     model.
+
+    ``layout`` is the serving KV-layout strategy the caller is tuning under
+    (``"dense"`` | ``"paged"``, from ``CompileOptions.kv_layout``): a cache
+    key dimension like the mesh descriptor, so decisions made for one
+    memory layout never leak into the other.
 
     ``measure=False`` ranks analytically only (no compilation — cheap
     enough for inline use on a serving path).  ``verify=True`` additionally
@@ -133,7 +138,7 @@ def tune(spec: Spec, *, backend: str = "jnp", dtype: str = "float32",
                         f"{type(spec).__name__}")
 
     # cache check happens BEFORE any space enumeration: a hit really is free
-    key = make_key(kernel, shape, dtype, backend, mesh_desc)
+    key = make_key(kernel, shape, dtype, backend, mesh_desc, layout=layout)
     cached = c.get(key)
     if cached is not None and not force:
         # an analytic-only record is upgraded when measurement is requested
@@ -214,16 +219,68 @@ def tune(spec: Spec, *, backend: str = "jnp", dtype: str = "float32",
 
 
 def get_tuned(kernel: str, *, backend: str = "jnp", dtype: str = "float32",
-              mesh=None, cache=None, **shape) -> Dict[str, object]:
+              mesh=None, layout: str = "dense", cache=None,
+              **shape) -> Dict[str, object]:
     """Tuned params for a kernel/shape — cache hit or cheap analytic search.
 
-    ``mesh`` as in :func:`tune`: a Mesh / descriptor string / None (resolve
-    the active mesh) — the descriptor is part of the cache key.  This is
-    the serving-path entry: it never compiles or measures, so a cold call
+    ``mesh`` / ``layout`` as in :func:`tune`: the mesh descriptor and the
+    serving KV layout are both cache-key dimensions.  This is the
+    serving-path entry: it never compiles or measures, so a cold call
     costs one pass of the analytic model and a hot call is a dict lookup."""
-    res = tune(kernel, backend=backend, dtype=dtype, mesh=mesh, cache=cache,
-               measure=False, **shape)
+    res = tune(kernel, backend=backend, dtype=dtype, mesh=mesh,
+               layout=layout, cache=cache, measure=False, **shape)
     return res.params
+
+
+def pick_kv_layout(cfg, *, slots: int, max_seq: int, block_size: int = 16,
+                   expected_seq: Optional[int] = None, platform=None,
+                   cache=None, force: bool = False) -> Dict[str, object]:
+    """Rank the serving KV layouts (dense vs paged) for a model/engine
+    shape with the HBM-bytes roofline and remember the answer.
+
+    Dense wins on raw decode traffic (no gather copy); paged wins the
+    moment the dense resident cache blows the platform's HBM budget
+    (``cost.HwModel.hbm_capacity`` — per-backend presets, ``cost.HW_PRESETS``).
+    The decision is cached under kernel ``"kv_layout"`` keyed by the engine
+    shape + platform, so a serving engine built with ``kv_layout="auto"``
+    resolves it with one dict lookup.
+
+    Returns ``{"layout", "dense_bytes", "paged_bytes", "dense_s",
+    "paged_s"}``."""
+    from . import cost as cost_mod
+    from repro.serve import paged as paged_mod
+    c = _resolve_cache(cache)
+    hw = cost_mod.hw_model(platform)
+    plat = platform or __import__("jax").default_backend()
+    layers = paged_mod._kv_layers(cfg)
+    shape = {"slots": slots, "max_seq": max_seq, "block": block_size,
+             "expected": int(expected_seq or 0), "layers": layers,
+             "kv": cfg.n_kv_heads, "hd": cfg.hd}
+    key = make_key("kv_layout", shape, str(cfg.dtype), str(plat), "single")
+    cached = c.get(key)
+    if cached is not None and not force:
+        return dict(cached["params"])
+    if layers == 0:
+        # no attention cache at all (ssm): the layouts are the same thing
+        record = {"layout": "dense", "dense_bytes": 0, "paged_bytes": 0,
+                  "dense_s": 0.0, "paged_s": 0.0}
+    else:
+        db = paged_mod.dtype_bytes(cfg.dtype)
+        kw = dict(slots=slots, max_seq=max_seq, kv_heads=cfg.n_kv_heads,
+                  head_dim=cfg.hd, layers=layers, dtype_bytes=db,
+                  block_size=block_size, expected_seq=expected_seq)
+        dense = cost_mod.kv_layout_cost("dense", **kw)
+        paged = cost_mod.kv_layout_cost("paged", **kw)
+        ds, ps = dense.seconds(hw), paged.seconds(hw)
+        record = {"layout": "dense" if ds <= ps else "paged",
+                  "dense_bytes": dense.resident_bytes,
+                  "paged_bytes": paged.resident_bytes,
+                  "dense_s": ds, "paged_s": ps}
+    c.put(key, {"kernel": "kv_layout", "params": record, "source": "analytic",
+                "shape": shape, "backend": str(plat),
+                "dtype": str(cfg.dtype), "mesh": "single",
+                "n_candidates": 2})
+    return record
 
 
 # ---------------------------------------------------------------------------

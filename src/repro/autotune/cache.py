@@ -44,9 +44,16 @@ def default_path() -> str:
 
 
 def make_key(kernel: str, shape: Dict[str, object], dtype: str = "float32",
-             backend: str = "jnp", mesh: str = "single") -> str:
+             backend: str = "jnp", mesh: str = "single",
+             layout: str = "dense") -> str:
+    """``kernel|shape|dtype|backend|mesh[|layout]`` — the serving KV layout
+    joins the key like the mesh descriptor, but only when it departs from
+    the default, so every pre-paged cache entry keeps its address."""
     shape_s = ",".join(f"{k}={shape[k]}" for k in sorted(shape))
-    return f"{kernel}|{shape_s}|{dtype}|{backend}|{mesh}"
+    key = f"{kernel}|{shape_s}|{dtype}|{backend}|{mesh}"
+    if layout and layout != "dense":
+        key += f"|layout={layout}"
+    return key
 
 
 class TuningCache:

@@ -51,9 +51,37 @@ class HwModel:
     vmem_penalty_s: float = 1.0e-3   # added per x of working-set overflow
     ici_bw: float = 5.0e10           # inter-chip bytes/s (collective traffic)
     collective_launch_s: float = 5.0e-6  # per collective step (ring hop)
+    hbm_capacity: float = 16e9       # resident-bytes budget (KV planning)
 
 
 DEFAULT_HW = HwModel()
+
+# Per-platform presets (ROADMAP PR 1 follow-up: per-backend HW models).
+# The cpu preset is the tpu model uniformly slowed 5x — identical *ratios*,
+# so single-device strategy rankings are platform-stable — but with a host
+# RAM capacity; the gpu preset has genuinely different balance (higher
+# flops-per-byte) and an 80 GB HBM budget.  The capacity term is what the
+# KV-layout planner (:func:`pick_kv_layout`) ranks against.
+HW_PRESETS = {
+    "tpu": DEFAULT_HW,
+    "cpu": HwModel(peak_flops=2.0e11, hbm_bw=2.0e10,
+                   grid_overhead_s=1.0e-5, loop_overhead_s=2.5e-7,
+                   ici_bw=1.0e10, collective_launch_s=2.5e-5,
+                   hbm_capacity=64e9),
+    "gpu": HwModel(peak_flops=1.0e13, hbm_bw=2.0e12,
+                   grid_overhead_s=3.0e-6, loop_overhead_s=1.0e-7,
+                   ici_bw=2.0e11, collective_launch_s=3.0e-6,
+                   hbm_capacity=80e9),
+}
+
+
+def hw_model(platform: Optional[str] = None) -> HwModel:
+    """The HwModel preset for ``platform`` (``jax.default_backend()`` when
+    None); unknown platforms get the TPU-shaped default."""
+    if platform is None:
+        import jax
+        platform = jax.default_backend()
+    return HW_PRESETS.get(platform, DEFAULT_HW)
 
 
 @dataclass
@@ -210,6 +238,57 @@ def estimate(expr: P.Phrase) -> CostEstimate:  # noqa: C901
 
 def predicted_seconds(expr: P.Phrase, hw: HwModel = DEFAULT_HW) -> float:
     return estimate(expr).seconds(hw)
+
+
+# ---------------------------------------------------------------------------
+# serving KV-layout roofline (dense vs paged) — the HBM-bytes term
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class KvLayoutCost:
+    """HBM view of one serving KV layout at one engine shape.
+
+    ``resident_bytes`` is the cache's standing footprint (what the paged
+    layout shrinks: the pool is sized for expected occupancy, not
+    ``slots * max_seq``); ``step_hbm_bytes`` is the attention-side traffic
+    of ONE decode step across all slots/layers (what the dense layout wins:
+    the paged gather materialises a per-slot view, roughly doubling the
+    read traffic)."""
+    layout: str
+    resident_bytes: float
+    step_hbm_bytes: float
+
+    def seconds(self, hw: HwModel = DEFAULT_HW) -> float:
+        """Predicted decode-step seconds, with a capacity penalty that
+        dominates once the resident cache blows the HBM budget — a layout
+        that does not fit is not a candidate, it is a spill."""
+        t = self.step_hbm_bytes / hw.hbm_bw
+        if self.resident_bytes > hw.hbm_capacity:
+            t += hw.vmem_penalty_s * (self.resident_bytes
+                                      / hw.hbm_capacity) * 1e3
+        return t
+
+
+def kv_layout_cost(layout: str, *, slots: int, max_seq: int, kv_heads: int,
+                   head_dim: int, layers: int, dtype_bytes: int = 4,
+                   block_size: int = 16,
+                   expected_seq: Optional[int] = None) -> KvLayoutCost:
+    """The KV-layout roofline point for one engine shape.
+
+    ``expected_seq`` is the anticipated MEAN occupied positions per slot
+    (prompt + decode budget); it defaults to ``max_seq // 2`` — the paged
+    pool is sized for it (rounded up to whole blocks per slot), while the
+    dense cache always pays ``max_seq``."""
+    if layout not in ("dense", "paged"):
+        raise ValueError(f"unknown kv layout {layout!r}")
+    per_pos = 2.0 * layers * kv_heads * head_dim * dtype_bytes  # k + v
+    step = slots * max_seq * per_pos       # masked full-view read per token
+    if layout == "dense":
+        return KvLayoutCost("dense", slots * max_seq * per_pos, step)
+    expected = max(1, int(expected_seq if expected_seq else max_seq // 2))
+    blocks_per_slot = -(-min(expected, max_seq) // block_size)
+    resident = slots * blocks_per_slot * block_size * per_pos
+    return KvLayoutCost("paged", resident, 2.0 * step)  # + gather copy
 
 
 # ---------------------------------------------------------------------------

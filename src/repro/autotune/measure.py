@@ -106,15 +106,22 @@ def measure_candidates(cands: Sequence[Candidate], *, backend: str = "jnp",
     return out
 
 
-def rank_by_cost(cands: Sequence[Candidate]) -> List[Tuple[Candidate, float]]:
+def rank_by_cost(cands: Sequence[Candidate], hw=None
+                 ) -> List[Tuple[Candidate, float]]:
     """(candidate, predicted seconds) sorted best-first; unbuildable or
-    un-costable candidates sort last with +inf."""
+    un-costable candidates sort last with +inf.
+
+    ``hw`` is the roofline HwModel; None resolves the per-platform preset
+    (``cost.hw_model()``), so analytic rankings use the hardware actually
+    under the process instead of the single TPU-shaped default."""
     from . import cost as cost_mod
+    if hw is None:
+        hw = cost_mod.hw_model()
     scored = []
     for c in cands:
         try:
             expr, _ = c.build()
-            s = cost_mod.predicted_seconds(expr)
+            s = cost_mod.predicted_seconds(expr, hw)
         except Exception:
             s = float("inf")
         scored.append((c, s))

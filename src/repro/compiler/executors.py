@@ -28,9 +28,10 @@ from typing import Callable, Dict, Optional, Tuple
 
 __all__ = ["ExecutorCache", "make_key", "default_cache"]
 
-# v2: make_key gained the mesh-descriptor component — v1 artefacts' keys can
-# never hit again, so they must not be parsed/compiled on load
-AOT_VERSION = 2
+# v2: make_key gained the mesh-descriptor component; v3: the kv_layout
+# component — older artefacts' keys can never hit again, so they must not
+# be parsed/compiled on load
+AOT_VERSION = 3
 
 
 def _fmt_params(params: Optional[Dict[str, object]]) -> str:
@@ -42,15 +43,17 @@ def _fmt_params(params: Optional[Dict[str, object]]) -> str:
 def make_key(kernel: str, shape: Dict[str, object], backend: str, *,
              params: Optional[Dict[str, object]] = None,
              dtype: str = "float32", mesh: str = "single",
+             layout: str = "dense",
              interpret: bool = True, jit: bool = True) -> str:
     """Canonical executor key.  Every component the compiled artefact depends
     on is in the key (same discipline as the tuning cache) — including the
-    mesh descriptor (``repro.mesh.descriptor``), so an executor compiled
-    against one mesh can never serve another — and a hit is always safe to
+    mesh descriptor (``repro.mesh.descriptor``) and the serving KV layout
+    (``CompileOptions.kv_layout``), so an executor compiled for one mesh or
+    memory strategy can never serve another — and a hit is always safe to
     reuse."""
     shape_s = ",".join(f"{k}={shape[k]}" for k in sorted(shape))
     return (f"{kernel}|{shape_s}|{dtype}|{backend}|{mesh or 'single'}"
-            f"|{_fmt_params(params)}"
+            f"|{layout or 'dense'}|{_fmt_params(params)}"
             f"|interpret={int(bool(interpret))}|jit={int(bool(jit))}")
 
 

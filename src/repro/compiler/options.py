@@ -62,6 +62,11 @@ class CompileOptions:
                   and mesh-keyed tuning; None defers to the process mesh
                   context (repro.sharding.ctx.get_mesh()), so single-device
                   runs stay single-device without ever naming a mesh
+    kv_layout     the serving KV-memory strategy this compilation scope
+                  belongs to ('dense' | 'paged'); a cache-key dimension
+                  (executor + tuning caches) like the mesh descriptor, so
+                  artefacts staged for one memory layout never serve the
+                  other
     """
     backend: str = "xla"
     autotune: bool = field(default_factory=_env_autotune)
@@ -69,6 +74,7 @@ class CompileOptions:
     interpret: bool = field(default_factory=default_interpret)
     jit: bool = True
     mesh: object = None
+    kv_layout: str = "dense"
 
     def __post_init__(self):
         valid = ops_impls()
@@ -76,6 +82,9 @@ class CompileOptions:
             raise ValueError(
                 f"unknown backend {self.backend!r}; valid backends: "
                 f"{list(valid)}")
+        if self.kv_layout not in ("dense", "paged"):
+            raise ValueError(f"kv_layout must be 'dense' or 'paged', got "
+                             f"{self.kv_layout!r}")
 
     def replace(self, **kw) -> "CompileOptions":
         """A copy with the given fields replaced (validates like __init__)."""

@@ -129,14 +129,16 @@ def _tuned(kernel: str, backend: str, opts: CompileOptions,
     if not opts.autotune:
         return None
     mesh_desc = opts.mesh_descriptor()
-    memo_key = (kernel, backend, mesh_desc, _cache_token(opts.tuning_cache),
+    memo_key = (kernel, backend, mesh_desc, opts.kv_layout,
+                _cache_token(opts.tuning_cache),
                 tuple(sorted(shape.items())))
     if memo_key in _tuned_memo:
         return _tuned_memo[memo_key]
     from repro import autotune
     try:
         params = autotune.get_tuned(kernel, backend=backend, mesh=mesh_desc,
-                                    cache=opts.tuning_cache, **shape)
+                                    cache=opts.tuning_cache,
+                                    layout=opts.kv_layout, **shape)
     except Exception as e:  # never let tuning break the op itself
         params = None
         _warn_once(("tune", kernel, backend),
@@ -158,6 +160,7 @@ def _compiled(kernel: str, shape: Dict[str, int],
     pipeline runs at most once per key per process, and a key pre-populated
     from the AOT store never stages at all."""
     key = _executors.make_key(kernel, shape, backend, params=params,
+                              layout=opts.kv_layout,
                               interpret=bool(opts.interpret),
                               jit=bool(opts.jit))
 
@@ -240,7 +243,8 @@ def _mesh_compiled(kernel: str, shape: Dict[str, int], opts: CompileOptions,
         return prog.compile("shardmap", options=opts, mesh=mesh_obj)
 
     key = _executors.make_key(kernel, shape, "shardmap", params=key_params,
-                              mesh=desc, interpret=bool(opts.interpret),
+                              mesh=desc, layout=opts.kv_layout,
+                              interpret=bool(opts.interpret),
                               jit=bool(opts.jit))
     return compiler.executor_cache().get_or_compile(
         key, build, meta={"interpret": bool(opts.interpret),

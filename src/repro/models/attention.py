@@ -180,6 +180,42 @@ def attention_prefill(p: AttnParams, cfg: ModelConfig, x, cache: KVCache,
     return out, new_cache
 
 
+def _attend_token(cfg: ModelConfig, q, k_l, v_l, pos, per_slot: bool,
+                  x_dtype, wo):
+    """The one-token masked-attention tail shared by every decode variant
+    (dense, paged, paged-view): q (b, 1, nh, hd) against k_l/v_l
+    (b, t, nkv, hd), valid where ``kpos <= pos`` — operation-for-operation
+    identical across callers, which is what makes 'paged decode is bitwise
+    the dense computation' a property of ONE code path."""
+    b = q.shape[0]
+    nh, nkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    group = nh // nkv
+    qg = q.reshape(b, nkv, group, hd)
+    scores = jnp.einsum("bngh,btnh->bngt", qg, k_l,
+                        preferred_element_type=jnp.float32) \
+        / jnp.sqrt(float(hd))
+    t = k_l.shape[1]
+    kpos = jnp.arange(t)[None, None, None, :]
+    valid = kpos <= (pos[:, None, None, None] if per_slot else pos)
+    scores = jnp.where(valid, scores, -jnp.inf)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bngt,btnh->bngh", probs.astype(v_l.dtype), v_l,
+                     preferred_element_type=jnp.float32)
+    out = out.astype(x_dtype).reshape(b, 1, nh * hd)
+    return jnp.einsum("bsh,hd->bsd", out, wo)
+
+
+def _page_slots(pos, bt, block_size: int, n_blocks: int):
+    """(page, offset) for per-slot positions against per-slot table rows
+    (bt: (b, max_blocks)); sentinel/overflow map to page ``n_blocks`` —
+    one past the pool, so scatters through them drop."""
+    b, mb = bt.shape
+    idx = pos // block_size
+    safe = jnp.clip(idx, 0, mb - 1)
+    page = jnp.where(idx < mb, bt[jnp.arange(b), safe], n_blocks)
+    return page, pos % block_size
+
+
 def attention_decode_inplace(p: AttnParams, cfg: ModelConfig, x, ck, cv,
                              li, pos):
     """One-token decode against LAYER-STACKED caches carried through the
@@ -215,20 +251,207 @@ def attention_decode_inplace(p: AttnParams, cfg: ModelConfig, x, ck, cv,
                                           (li, zero, pos, zero, zero))
     k_l = jax.lax.dynamic_index_in_dim(ck, li, axis=0, keepdims=False)
     v_l = jax.lax.dynamic_index_in_dim(cv, li, axis=0, keepdims=False)
+    return _attend_token(cfg, q, k_l, v_l, pos, per_slot, x.dtype,
+                         p.wo), ck, cv
+
+
+# ---------------------------------------------------------------------------
+# paged KV: page-mapped variants of prefill/decode (serve.paged owns the
+# host-side block pool; the sentinel convention is shared: table entries
+# >= n_blocks mean "no page", writes through them drop, reads are masked)
+# ---------------------------------------------------------------------------
+
+
+def init_paged_kv(cfg: ModelConfig, n_blocks: int, block_size: int
+                  ) -> KVCache:
+    """A paged KV pool: ``(n_blocks, block_size, nkv, hd)`` pages."""
+    shape = (n_blocks, block_size, cfg.n_kv_heads, cfg.hd)
+    return KVCache(jnp.zeros(shape, cfg.dtype), jnp.zeros(shape, cfg.dtype))
+
+
+def _pages_for_positions(pos, bt_row, block_size: int, n_blocks: int):
+    """(page, offset) for a vector of positions against ONE table row.
+
+    Out-of-table positions and sentinel entries both map to page
+    ``n_blocks`` — one past the pool — so ``.at[...].set(mode='drop')``
+    discards the write, exactly like the dense cache drops writes past
+    ``max_seq``."""
+    pos = jnp.asarray(pos, jnp.int32)
+    max_blocks = bt_row.shape[0]
+    idx = pos // block_size
+    safe = jnp.clip(idx, 0, max_blocks - 1)
+    page = jnp.where(idx < max_blocks, bt_row[safe], n_blocks)
+    return page, pos % block_size
+
+
+def _gather_pages(pool, bt):
+    """Gather a per-slot logical view from a page pool.
+
+    pool: (n_blocks, block_size, nkv, hd); bt: (b, max_blocks) int32.
+    Returns (b, max_blocks * block_size, nkv, hd).  Sentinel entries clip
+    to an arbitrary real page — their positions are beyond every valid
+    ``kpos <= pos`` mask, so the values are never attended; clipping keeps
+    the gather maskless on the hot path."""
+    nb = pool.shape[0]
+    g = pool[jnp.clip(bt, 0, nb - 1)]          # (b, mb, bs, nkv, hd)
+    return g.reshape(bt.shape[0], -1, *pool.shape[2:])
+
+
+def _masked_attend(cfg: ModelConfig, q, k_all, v_all, qpos, kpos):
+    """f32 masked attention of q (b, sq, nh, hd) against a gathered KV view
+    (b, t, nkv, hd); valid where kpos (b|1, t) <= qpos (b, sq).  The same
+    einsum/softmax discipline as :func:`attention`'s unchunked path, so a
+    paged/cached prefill stays numerically in-family with the dense one."""
+    b, sq, nh, hd = q.shape
+    nkv = k_all.shape[2]
     group = nh // nkv
-    qg = q.reshape(b, nkv, group, hd)
-    scores = jnp.einsum("bngh,btnh->bngt", qg, k_l,
-                        preferred_element_type=jnp.float32) \
-        / jnp.sqrt(float(hd))
-    t = k_l.shape[1]
-    kpos = jnp.arange(t)[None, None, None, :]
-    valid = kpos <= (pos[:, None, None, None] if per_slot else pos)
+    qg = q.reshape(b, sq, nkv, group, hd)
+    scores = jnp.einsum("bsngh,btnh->bngst", qg.astype(jnp.float32),
+                        k_all.astype(jnp.float32)) / jnp.sqrt(float(hd))
+    valid = kpos[:, None, None, None, :] <= qpos[:, None, None, :, None]
     scores = jnp.where(valid, scores, -jnp.inf)
     probs = jax.nn.softmax(scores, axis=-1)
-    out = jnp.einsum("bngt,btnh->bngh", probs.astype(v_l.dtype), v_l,
-                     preferred_element_type=jnp.float32)
-    out = out.astype(x.dtype).reshape(b, 1, nh * hd)
+    out = jnp.einsum("bngst,btnh->bsngh", probs, v_all.astype(jnp.float32))
+    return out.reshape(b, sq, nh, hd)
+
+
+def attention_prefill_cached(p: AttnParams, cfg: ModelConfig, x,
+                             cache: KVCache, start):
+    """Continuation prefill for a CHUNKED prompt against a dense cache:
+    write this chunk's k/v at [start, start+s) and attend q against the
+    whole cache masked by ``kpos <= qpos`` — earlier chunks' positions are
+    already cached, so a prompt split across chunk boundaries sees exactly
+    the attention a single-call prefill would.  ``start`` may be traced
+    (one executable serves every chunk offset)."""
+    b, s, _ = x.shape
+    start = jnp.asarray(start, jnp.int32)
+    positions = start + jnp.arange(s)[None, :]
+    q, k, v = _project_qkv(p, cfg, x, positions)
+    # scatter (mode='drop'), not dynamic_update_slice: a tail chunk whose
+    # padded bucket overruns max_seq must DROP the out-of-range rows —
+    # dynamic_update_slice would clamp the start and silently clobber
+    # earlier positions (the same discipline as the paged sentinel)
+    new_cache = KVCache(
+        cache.k.at[:, positions[0]].set(k.astype(cache.k.dtype),
+                                        mode="drop"),
+        cache.v.at[:, positions[0]].set(v.astype(cache.v.dtype),
+                                        mode="drop"))
+    kpos = jnp.arange(new_cache.k.shape[1])[None, :]
+    out = _masked_attend(cfg, q, new_cache.k, new_cache.v, positions, kpos)
+    out = out.astype(x.dtype).reshape(b, s, -1)
+    return jnp.einsum("bsh,hd->bsd", out, p.wo), new_cache
+
+
+def paged_attention_prefill(p: AttnParams, cfg: ModelConfig, x, ck, cv, li,
+                            bt_row, start, *, first: bool):
+    """Prefill one prompt chunk into LAYER-STACKED page pools.
+
+    x: (1, s, d); ck/cv: (L, n_blocks, block_size, nkv, hd); bt_row: the
+    slot's (max_blocks,) block-table row; start: chunk offset (traced ok).
+    k/v are scattered page-by-page (writes through sentinel/overflow
+    entries drop — ``mode='drop'``, the dense out-of-range discipline).
+
+    ``first`` (static) selects the attention path: the first chunk attends
+    within x exactly like the dense :func:`attention_prefill` (bitwise the
+    same computation, which is what keeps a paged engine token-identical to
+    the dense oracle for prompts that fit one chunk); continuation chunks
+    gather the slot's pages and attend masked by ``kpos <= qpos``."""
+    b, s, _ = x.shape
+    nb, bs = ck.shape[1], ck.shape[2]
+    start = jnp.asarray(start, jnp.int32)
+    positions = start + jnp.arange(s)[None, :]
+    q, k, v = _project_qkv(p, cfg, x, positions)
+    page, off = _pages_for_positions(positions[0], bt_row, bs, nb)
+    ck = ck.at[li, page, off].set(k[0].astype(ck.dtype), mode="drop")
+    cv = cv.at[li, page, off].set(v[0].astype(cv.dtype), mode="drop")
+    if first:
+        out = attention(p, cfg, x, positions)
+        return out, ck, cv
+    k_l = jax.lax.dynamic_index_in_dim(ck, li, axis=0, keepdims=False)
+    v_l = jax.lax.dynamic_index_in_dim(cv, li, axis=0, keepdims=False)
+    k_all = _gather_pages(k_l, bt_row[None])
+    v_all = _gather_pages(v_l, bt_row[None])
+    kpos = jnp.arange(k_all.shape[1])[None, :]
+    out = _masked_attend(cfg, q, k_all, v_all, positions, kpos)
+    out = out.astype(x.dtype).reshape(b, s, -1)
     return jnp.einsum("bsh,hd->bsd", out, p.wo), ck, cv
+
+
+def paged_attention_decode_inplace(p: AttnParams, cfg: ModelConfig, x, ck,
+                                   cv, li, pos, bt):
+    """One-token decode against layer-stacked page pools — the paged twin
+    of :func:`attention_decode_inplace`'s per-slot path.
+
+    ck/cv: (L, n_blocks, block_size, nkv, hd); pos: (b,) per-slot
+    positions; bt: (b, max_blocks) block tables.  The new token is written
+    through the table (drop on sentinel/overflow — a retired or
+    mid-prefill lane whose position was parked at ``max_seq`` writes
+    nothing); the read gathers the slot's pages into a
+    ``(b, max_blocks * block_size, nkv, hd)`` view and runs the *identical*
+    masked-attention math as the dense path, so paged decode is bitwise
+    the dense computation whenever ``max_blocks * block_size == max_seq``.
+    """
+    b = x.shape[0]
+    nb, bs = ck.shape[1], ck.shape[2]
+    pos = jnp.asarray(pos, jnp.int32)
+    if pos.ndim == 0:
+        pos = jnp.broadcast_to(pos, (b,))
+    q, k, v = _project_qkv(p, cfg, x, pos[:, None])
+    page, off = _page_slots(pos, bt, bs, nb)
+    ck = ck.at[li, page, off].set(k[:, 0].astype(ck.dtype), mode="drop")
+    cv = cv.at[li, page, off].set(v[:, 0].astype(cv.dtype), mode="drop")
+    k_l = jax.lax.dynamic_index_in_dim(ck, li, axis=0, keepdims=False)
+    v_l = jax.lax.dynamic_index_in_dim(cv, li, axis=0, keepdims=False)
+    k_all = _gather_pages(k_l, bt)
+    v_all = _gather_pages(v_l, bt)
+    return _attend_token(cfg, q, k_all, v_all, pos, True, x.dtype,
+                         p.wo), ck, cv
+
+
+def gather_paged_view(ck, cv, bt) -> Tuple[jax.Array, jax.Array]:
+    """Materialise the per-slot logical view of layer-stacked page pools.
+
+    ck/cv: (L, n_blocks, block_size, nkv, hd); bt: (b, max_blocks).
+    Returns (L, b, max_blocks * block_size, nkv, hd) pairs — shaped exactly
+    like the dense layer-stacked cache, holding each slot's pages in
+    logical order.  The decode chunk gathers this ONCE per chunk and
+    updates it incrementally per token (:func:`paged_attention_decode_view`)
+    instead of re-gathering every step/layer — the page indirection is paid
+    per chunk, not per token."""
+    nb = ck.shape[1]
+    safe = jnp.clip(bt, 0, nb - 1)
+    L = ck.shape[0]
+    vk = ck[:, safe].reshape(L, bt.shape[0], -1, *ck.shape[3:])
+    vv = cv[:, safe].reshape(L, bt.shape[0], -1, *cv.shape[3:])
+    return vk, vv
+
+
+def paged_attention_decode_view(p: AttnParams, cfg: ModelConfig, x, ck, cv,
+                                vk, vv, li, pos, bt):
+    """One-token decode against a pre-gathered per-slot view.
+
+    The attention + view update are operation-for-operation the dense
+    :func:`attention_decode_inplace` per-slot path on (vk, vv) — bitwise
+    the dense computation — and the new token is ALSO scattered into the
+    page pool (ck, cv) through the block table, so the pool stays the
+    source of truth across chunk boundaries.  Writes drop both ways for a
+    parked lane (pos past the view / sentinel page)."""
+    b = x.shape[0]
+    nb, bs = ck.shape[1], ck.shape[2]
+    pos = jnp.asarray(pos, jnp.int32)
+    if pos.ndim == 0:
+        pos = jnp.broadcast_to(pos, (b,))
+    q, k, v = _project_qkv(p, cfg, x, pos[:, None])
+    slots = jnp.arange(b)
+    vk = vk.at[li, slots, pos].set(k[:, 0].astype(vk.dtype), mode="drop")
+    vv = vv.at[li, slots, pos].set(v[:, 0].astype(vv.dtype), mode="drop")
+    page, off = _page_slots(pos, bt, bs, nb)
+    ck = ck.at[li, page, off].set(k[:, 0].astype(ck.dtype), mode="drop")
+    cv = cv.at[li, page, off].set(v[:, 0].astype(cv.dtype), mode="drop")
+    k_l = jax.lax.dynamic_index_in_dim(vk, li, axis=0, keepdims=False)
+    v_l = jax.lax.dynamic_index_in_dim(vv, li, axis=0, keepdims=False)
+    return _attend_token(cfg, q, k_l, v_l, pos, True, x.dtype,
+                         p.wo), ck, cv, vk, vv
 
 
 def attention_decode(p: AttnParams, cfg: ModelConfig, x, cache: KVCache,

@@ -252,7 +252,65 @@ class Model:
         return jax.tree_util.tree_map(
             lambda l: jnp.broadcast_to(l, (cfg.n_layers,) + l.shape), kv)
 
-    def prefill(self, params, tokens, cache, start: int = 0, lengths=None):
+    # -- paged serving cache -------------------------------------------------
+    def init_paged_cache(self, batch: int, max_seq: int, *, n_blocks: int,
+                         block_size: int):
+        """The ``kv_layout="paged"`` engine cache: same pytree *structure*
+        as :meth:`init_cache`, but KV leaves are page pools
+        (``(n_blocks, block_size, nkv, hd)`` per layer/group) with no slot
+        axis — slots map into the pool through their block tables.
+        Recurrent state (ssm / the hybrid's mamba backbone) is O(1) per
+        slot and stays slot-indexed; the ssm family has no KV at all, so
+        its paged cache IS its dense cache."""
+        cfg = self.cfg
+        if cfg.family == "ssm":
+            return self.init_cache(batch, max_seq)
+        pool = attn_mod.init_paged_kv(cfg, n_blocks, block_size)
+        if cfg.family == "hybrid":
+            g = cfg.n_layers // cfg.attn_every
+            ms = mamba_mod.init_state(cfg, batch)
+            mstack = jax.tree_util.tree_map(
+                lambda l: jnp.broadcast_to(
+                    l, (g, cfg.attn_every) + l.shape), ms)
+            kvstack = jax.tree_util.tree_map(
+                lambda l: jnp.broadcast_to(l, (g,) + l.shape), pool)
+            return {"mamba": mstack, "kv": kvstack}
+        return jax.tree_util.tree_map(
+            lambda l: jnp.broadcast_to(l, (cfg.n_layers,) + l.shape), pool)
+
+    def split_paged_cache(self, cache):
+        """(kv pools, slot-indexed recurrent state) — either may be None."""
+        if self.cfg.family == "ssm":
+            return None, cache
+        if self.cfg.family == "hybrid":
+            return cache["kv"], cache["mamba"]
+        return cache, None
+
+    def merge_paged_cache(self, kv, state):
+        """Inverse of :meth:`split_paged_cache`."""
+        if self.cfg.family == "ssm":
+            return state
+        if self.cfg.family == "hybrid":
+            return {"mamba": state, "kv": kv}
+        return kv
+
+    def init_prefill_state(self, batch: int = 1):
+        """Fresh batch-``batch`` recurrent staging state for a chunked
+        admission (None for pure-attention families — their prefill state
+        lives entirely in the page pool)."""
+        cfg = self.cfg
+        if cfg.family == "ssm":
+            return self.init_cache(batch, 1)
+        if cfg.family == "hybrid":
+            g = cfg.n_layers // cfg.attn_every
+            ms = mamba_mod.init_state(cfg, batch)
+            return jax.tree_util.tree_map(
+                lambda l: jnp.broadcast_to(
+                    l, (g, cfg.attn_every) + l.shape), ms)
+        return None
+
+    def prefill(self, params, tokens, cache, start: int = 0, lengths=None,
+                attend_cache: bool = False):
         """Fill the cache with ``tokens``; returns (last_logits, cache).
 
         ``lengths`` ((b,) int32) marks the real prompt length per row for
@@ -264,7 +322,15 @@ class Model:
         recurrent families (ssm/hybrid) the state updates past ``lengths``
         are masked off (rwkv6.time_mix / mamba2.forward), so the returned
         cache is ALSO the unpadded cache and padded prefill is
-        padding-invariant across every family."""
+        padding-invariant across every family.
+
+        ``attend_cache=True`` is the CHUNKED-prefill continuation form: the
+        attention families attend against the whole (updated) cache masked
+        by ``kpos <= qpos`` instead of within ``tokens`` alone, so a chunk
+        at offset ``start > 0`` sees every earlier chunk's positions.
+        ``start`` may be traced in that form (one executable per chunk
+        shape serves every offset).  Recurrent families carry their state
+        through ``cache`` either way, so the flag only changes attention."""
         cfg = self.cfg
         x = self.embed(params, tokens)
         b, s = x.shape[:2]
@@ -295,8 +361,12 @@ class Model:
                     return c + y, nst
                 x, new_mst = jax.lax.scan(inner, x, ((mam, lns), mstates))
                 xa = rmsnorm(x, hp.shared_ln, cfg.norm_eps)
-                y, new_kv = attn_mod.attention_prefill(
-                    hp.shared_attn, cfg, xa, kv, start)
+                if attend_cache:
+                    y, new_kv = attn_mod.attention_prefill_cached(
+                        hp.shared_attn, cfg, xa, kv, start)
+                else:
+                    y, new_kv = attn_mod.attention_prefill(
+                        hp.shared_attn, cfg, xa, kv, start)
                 x = x + y
                 xm = rmsnorm(x, hp.shared_ln2, cfg.norm_eps)
                 x = x + ffn_mod.mlp(hp.shared_mlp, xm)
@@ -309,9 +379,13 @@ class Model:
             def body(carry, layer_and_cache):
                 x, aux = carry
                 layer, kv = layer_and_cache
-                y_attn, new_kv = attn_mod.attention_prefill(
-                    layer.attn, cfg, rmsnorm(x, layer.ln1, cfg.norm_eps),
-                    kv, start)
+                h_in = rmsnorm(x, layer.ln1, cfg.norm_eps)
+                if attend_cache:
+                    y_attn, new_kv = attn_mod.attention_prefill_cached(
+                        layer.attn, cfg, h_in, kv, start)
+                else:
+                    y_attn, new_kv = attn_mod.attention_prefill(
+                        layer.attn, cfg, h_in, kv, start)
                 h = x + y_attn
                 y = rmsnorm(h, layer.ln2, cfg.norm_eps)
                 if cfg.n_experts:
@@ -333,17 +407,114 @@ class Model:
         logits = jnp.einsum("bd,dv->bv", x_last, params["head"])
         return logits, new_cache
 
-    def decode_step(self, params, token, cache, pos):
+    def prefill_paged(self, params, tokens, kv, bt_row, state, start,
+                      lengths, *, first: bool):
+        """Prefill one prompt chunk of ONE slot into paged KV pools.
+
+        tokens: (1, s); kv: the engine's pooled KV leaves
+        (:meth:`split_paged_cache`; None for ssm); bt_row: the slot's
+        (max_blocks,) block-table row; state: batch-1 recurrent staging
+        state (:meth:`init_prefill_state`; None for attention-only
+        families); start: chunk offset (traced ok when ``not first``);
+        lengths: (1,) real token count WITHIN this chunk.  Returns
+        (last_logits, kv, state).
+
+        ``first`` (static) is the chunk-0 form: attention runs within
+        ``tokens`` exactly like the dense admission prefill — bitwise the
+        oracle's computation for prompts that fit one chunk; continuation
+        chunks gather the slot's pages and attend ``kpos <= qpos``."""
+        cfg = self.cfg
+        if cfg.family == "ssm":
+            logits, new_state = self.prefill(params, tokens, state,
+                                             lengths=lengths)
+            return logits, kv, new_state
+        from .common import rmsnorm
+        x = self.embed(params, tokens)
+        b, s = x.shape[:2]
+        start = jnp.asarray(start, jnp.int32)
+        positions = start + jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+
+        if cfg.family == "hybrid":
+            hp: HybridParams = params["blocks"]
+
+            def group(carry, inp):
+                x, ck, cv, gi = carry
+                (mam, lns), mstates = inp
+
+                def inner(c, l):
+                    (mp, ln), st = l
+                    y, nst = mamba_mod.forward(
+                        mp, cfg, rmsnorm(c, ln, cfg.norm_eps), st,
+                        lengths=lengths)
+                    return c + y, nst
+                x, new_mst = jax.lax.scan(inner, x, ((mam, lns), mstates))
+                xa = rmsnorm(x, hp.shared_ln, cfg.norm_eps)
+                y, ck, cv = attn_mod.paged_attention_prefill(
+                    hp.shared_attn, cfg, xa, ck, cv, gi, bt_row, start,
+                    first=first)
+                x = x + y
+                xm = rmsnorm(x, hp.shared_ln2, cfg.norm_eps)
+                x = x + ffn_mod.mlp(hp.shared_mlp, xm)
+                return (x, ck, cv, gi + 1), new_mst
+            (x, ck, cv, _), new_state = jax.lax.scan(
+                group, (x, kv.k, kv.v, jnp.int32(0)),
+                ((hp.mamba, hp.mamba_ln), state))
+        else:
+            def body(carry, layer):
+                x, ck, cv, li = carry
+                h_in = rmsnorm(x, layer.ln1, cfg.norm_eps)
+                y, ck, cv = attn_mod.paged_attention_prefill(
+                    layer.attn, cfg, h_in, ck, cv, li, bt_row, start,
+                    first=first)
+                h = x + y
+                z = rmsnorm(h, layer.ln2, cfg.norm_eps)
+                if cfg.n_experts:
+                    out, _ = ffn_mod.moe(layer.mlp, cfg, z)
+                else:
+                    out = ffn_mod.mlp(layer.mlp, z)
+                return (h + out, ck, cv, li + 1), None
+            (x, ck, cv, _), _ = jax.lax.scan(
+                body, (x, kv.k, kv.v, jnp.int32(0)), params["blocks"])
+            new_state = state
+
+        x = rmsnorm(x, params["ln_f"], cfg.norm_eps)
+        idx = jnp.clip(jnp.asarray(lengths, jnp.int32) - 1, 0, s - 1)
+        x_last = jnp.take_along_axis(x, idx[:, None, None], axis=1)[:, 0]
+        logits = jnp.einsum("bd,dv->bv", x_last, params["head"])
+        return logits, KVCache(ck, cv), new_state
+
+    def gather_paged_view(self, cache, block_tables):
+        """The per-slot logical (vk, vv) view of a paged cache's pools —
+        gathered once per decode chunk (None for the ssm family, which has
+        no KV).  See :func:`repro.models.attention.gather_paged_view`."""
+        if self.cfg.family == "ssm":
+            return None
+        kv, _ = self.split_paged_cache(cache)
+        return attn_mod.gather_paged_view(kv.k, kv.v, block_tables)
+
+    def decode_step(self, params, token, cache, pos, block_tables=None,
+                    kv_view=None):
         """token: (b, 1[, K]) -> (logits (b, vocab), new cache).
 
         ``pos`` is a scalar (lock-step batch) or a (b,) per-slot position
         vector (continuous batching) — threaded through to
-        ``attention_decode_inplace``; recurrent families ignore it."""
+        ``attention_decode_inplace``; recurrent families ignore it.
+
+        ``block_tables`` ((b, max_blocks) int32) selects the PAGED KV
+        path: the cache's KV leaves are page pools and attention goes
+        through :func:`repro.models.attention.paged_attention_decode_inplace`
+        — same masked math over a gathered per-slot view, so the layout is
+        a strategy choice, not a fork in the model.  With ``kv_view`` (the
+        (vk, vv) pair from :meth:`gather_paged_view`, gathered once per
+        chunk) attention runs against the view and the return value is
+        ``(logits, cache, view)`` — the fused chunk's amortised-gather
+        form."""
         cfg = self.cfg
         x = self.embed(params, token)
         b = x.shape[0]
         from .common import rmsnorm
 
+        new_view = None
         if cfg.family == "ssm":
             def body(carry, layer_and_state):
                 x = carry
@@ -357,9 +528,13 @@ class Model:
             # updates (attention_decode_inplace); small mamba states stay
             # as scanned xs/ys.
             ck0, cv0 = cache["kv"].k, cache["kv"].v   # (G, b, s, kv, hd)
+            # the view (when given) rides in the carry NEXT TO the pools —
+            # attention reads/updates the view, the pool gets the mirrored
+            # token write; without a view the carry keeps its dense shape
+            kv0 = kv_view if kv_view is not None else ()
 
             def group(carry, inp):
-                x, ck, cv, gi = carry
+                (x, ck, cv, gi), view = carry[:4], carry[4:]
                 (mam, lns), mstates = inp
 
                 def inner(c, l):
@@ -369,35 +544,64 @@ class Model:
                     return c + y, nst
                 x, new_mst = jax.lax.scan(inner, x, ((mam, lns), mstates))
                 xa = rmsnorm(x, hp.shared_ln, cfg.norm_eps)
-                y, ck, cv = attn_mod.attention_decode_inplace(
-                    hp.shared_attn, cfg, xa, ck, cv, gi, pos)
+                if kv_view is not None:
+                    y, ck, cv, vk, vv = attn_mod.paged_attention_decode_view(
+                        hp.shared_attn, cfg, xa, ck, cv, view[0], view[1],
+                        gi, pos, block_tables)
+                    view = (vk, vv)
+                elif block_tables is not None:
+                    y, ck, cv = attn_mod.paged_attention_decode_inplace(
+                        hp.shared_attn, cfg, xa, ck, cv, gi, pos,
+                        block_tables)
+                else:
+                    y, ck, cv = attn_mod.attention_decode_inplace(
+                        hp.shared_attn, cfg, xa, ck, cv, gi, pos)
                 x = x + y
                 xm = rmsnorm(x, hp.shared_ln2, cfg.norm_eps)
                 x = x + ffn_mod.mlp(hp.shared_mlp, xm)
-                return (x, ck, cv, gi + 1), new_mst
-            (x, ck, cv, _), new_mst = jax.lax.scan(
-                group, (x, ck0, cv0, jnp.int32(0)),
+                return (x, ck, cv, gi + 1) + view, new_mst
+            out_carry, new_mst = jax.lax.scan(
+                group, (x, ck0, cv0, jnp.int32(0)) + tuple(kv0),
                 ((hp.mamba, hp.mamba_ln), cache["mamba"]))
+            x, ck, cv = out_carry[0], out_carry[1], out_carry[2]
             new_cache = {"mamba": new_mst, "kv": KVCache(ck, cv)}
+            if kv_view is not None:
+                new_view = out_carry[4:6]
         else:
             ck0, cv0 = cache.k, cache.v               # (L, b, s, kv, hd)
+            kv0 = kv_view if kv_view is not None else ()
 
             def body(carry, layer):
-                x, ck, cv, li = carry
+                (x, ck, cv, li), view = carry[:4], carry[4:]
                 h = rmsnorm(x, layer.ln1, cfg.norm_eps)
-                y, ck, cv = attn_mod.attention_decode_inplace(
-                    layer.attn, cfg, h, ck, cv, li, pos)
+                if kv_view is not None:
+                    y, ck, cv, vk, vv = attn_mod.paged_attention_decode_view(
+                        layer.attn, cfg, h, ck, cv, view[0], view[1], li,
+                        pos, block_tables)
+                    view = (vk, vv)
+                elif block_tables is not None:
+                    y, ck, cv = attn_mod.paged_attention_decode_inplace(
+                        layer.attn, cfg, h, ck, cv, li, pos, block_tables)
+                else:
+                    y, ck, cv = attn_mod.attention_decode_inplace(
+                        layer.attn, cfg, h, ck, cv, li, pos)
                 x = x + y
                 z = rmsnorm(x, layer.ln2, cfg.norm_eps)
                 if cfg.n_experts:
                     out, _ = ffn_mod.moe(layer.mlp, cfg, z)
                 else:
                     out = ffn_mod.mlp(layer.mlp, z)
-                return (x + out, ck, cv, li + 1), None
-            (x, ck, cv, _), _ = jax.lax.scan(
-                body, (x, ck0, cv0, jnp.int32(0)), params["blocks"])
+                return (x + out, ck, cv, li + 1) + view, None
+            out_carry, _ = jax.lax.scan(
+                body, (x, ck0, cv0, jnp.int32(0)) + tuple(kv0),
+                params["blocks"])
+            x, ck, cv = out_carry[0], out_carry[1], out_carry[2]
             new_cache = KVCache(ck, cv)
+            if kv_view is not None:
+                new_view = out_carry[4:6]
 
         x = rmsnorm(x, params["ln_f"], cfg.norm_eps)
         logits = jnp.einsum("bd,dv->bv", x[:, -1], params["head"])
+        if kv_view is not None:
+            return logits, new_cache, new_view
         return logits, new_cache

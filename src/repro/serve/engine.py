@@ -17,7 +17,10 @@ Two engines share that core:
     boundaries (:mod:`repro.serve.scheduler`), prompts are right-padded to
     power-of-two buckets and the decode batch is always ``slots`` wide, so
     jit sees a small closed set of shapes — zero recompiles after one pass
-    over the buckets.
+    over the buckets.  KV memory is a strategy dimension
+    (``kv_layout="dense"|"paged"|"auto"``, :mod:`repro.serve.paged`) and
+    long prompts prefill in chunks across boundaries (``prefill_chunk=``),
+    capping the bucket set.
   * :class:`ShardedEngine` — the same continuous engine with the slot axis
     sharded over a named mesh axis (``data``): device state carries
     ``NamedSharding`` placements and GSPMD partitions the identical jitted
@@ -148,13 +151,18 @@ class _EngineBase:
     """Model/params + the jitted fast-path functions + tuner/AOT warm-up."""
 
     def __init__(self, model: Model, params, *, max_seq: int, chunk: int,
-                 tuning_cache=None, batch_sizes=(1, 8), aot="auto"):
+                 tuning_cache=None, batch_sizes=(1, 8), aot="auto",
+                 kv_layout: str = "dense"):
         if chunk < 1:
             raise ValueError(f"chunk must be >= 1, got {chunk}")
+        if kv_layout not in ("dense", "paged"):
+            raise ValueError(f"kv_layout must be 'dense' or 'paged', got "
+                             f"{kv_layout!r}")
         self.model = model
         self.params = params
         self.max_seq = max_seq
         self.chunk = chunk
+        self.kv_layout = kv_layout
         self.tuning_cache = tuning_cache
         self.tuned: Dict[str, dict] = {}
         if tuning_cache is not None:
@@ -162,6 +170,16 @@ class _EngineBase:
         self._prefill = jax.jit(
             lambda params, tokens, cache, lengths:
             model.prefill(params, tokens, cache, lengths=lengths))
+        # fresh-cache prefill: the zero cache is materialised INSIDE the
+        # program, so XLA fuses the zero-init with the cache writes — no
+        # host-side init_cache allocation, no input-cache copy per call
+        self._prefill_fresh = jax.jit(
+            lambda params, tokens, lengths:
+            model.prefill(params, tokens,
+                          model.init_cache(tokens.shape[0], max_seq),
+                          lengths=lengths))
+        self._prefill_exes: Dict[tuple, object] = {}
+        self._warned_prefill_fallback = False
         self._sample0 = jax.jit(sample_tokens)
         self._chunk_fn = self._make_chunk_fn()
 
@@ -170,29 +188,91 @@ class _EngineBase:
     def _make_chunk_fn(self):
         model, cfg, max_seq = self.model, self.model.cfg, self.max_seq
 
-        def chunk_fn(params, cache, tokens, pos, keys, temps, top_ks):
+        def chunk_fn(params, cache, tokens, pos, keys, temps, top_ks, bt):
+            # paged: gather each slot's pages into a dense-shaped view ONCE
+            # per chunk; steps attend/update the view and mirror the token
+            # write into the pool — the page indirection is paid per chunk,
+            # not per token per layer
+            view = None if bt is None else model.gather_paged_view(cache, bt)
+
             def step(carry, _):
-                tokens, cache, pos, keys = carry
+                tokens, cache, view, pos, keys = carry
                 tok = tokens[:, None]
                 if cfg.n_codebooks:
                     tok = jnp.broadcast_to(
                         tok[..., None],
                         (tok.shape[0], 1, cfg.n_codebooks))
-                logits, cache = model.decode_step(params, tok, cache, pos)
+                if view is None:
+                    logits, cache = model.decode_step(params, tok, cache,
+                                                      pos, block_tables=bt)
+                else:
+                    logits, cache, view = model.decode_step(
+                        params, tok, cache, pos, block_tables=bt,
+                        kv_view=view)
                 keys, sub = _split_keys(keys)
                 nxt = sample_tokens(logits, sub, temps, top_ks)
                 # clamp: a retired slot keeps decoding until the boundary;
                 # past max_seq its (per-slot-path) cache writes are dropped
+                # (the paged path drops through the block-table sentinel)
                 pos = jnp.minimum(pos + 1, max_seq)
-                return (nxt, cache, pos, keys), nxt
+                return (nxt, cache, view, pos, keys), nxt
 
-            (tokens, cache, pos, keys), toks = jax.lax.scan(
-                step, (tokens, cache, pos, keys), None, length=self.chunk)
+            (tokens, cache, view, pos, keys), toks = jax.lax.scan(
+                step, (tokens, cache, view, pos, keys), None,
+                length=self.chunk)
             return cache, tokens, pos, keys, toks.T  # toks: (b, chunk)
 
         # cache + token/pos/key buffers are donated: decode is copy-free and
-        # the engine rebinds the returned buffers each chunk
+        # the engine rebinds the returned buffers each chunk.  ``bt`` (the
+        # block tables; None for dense layouts) is tiny and read-only.
         return jax.jit(chunk_fn, donate_argnums=(1, 2, 3, 4))
+
+    # -- prefill: per-bucket AOT executables ---------------------------------
+
+    def _prefill_call(self, tokens, lengths):
+        """Run the fresh-cache, length-aware prefill through a PER-SHAPE
+        ahead-of-time compiled executable.
+
+        This is the admission path's fix for the PR 3 prefill regression
+        (BENCH_serve.json showed fused prefill LOSING to the legacy loop):
+        ``jax.jit`` dispatch re-hashed the call signature every admission,
+        and every call re-padded + copied a host-initialised zero cache
+        through an undonated argument.  The engine instead lowers +
+        compiles once per padded-bucket shape, calls the executable
+        directly, and lets the program build its own zero cache.  Falls
+        back to the jitted path if the executable rejects the arguments
+        (e.g. sharding drift)."""
+        key = (tokens.shape, str(tokens.dtype))
+        exe = self._prefill_exes.get(key)
+        if exe is None:
+            exe = self._prefill_fresh.lower(self.params, tokens,
+                                            lengths).compile()
+            self._prefill_exes[key] = exe
+        try:
+            return exe(self.params, tokens, lengths)
+        except Exception as e:
+            # safe only because nothing is donated here; warn so a
+            # persistent mismatch (every admission paying jit dispatch)
+            # is a diagnosable regression, not an invisible one
+            if not self._warned_prefill_fallback:
+                self._warned_prefill_fallback = True
+                import warnings
+                warnings.warn(
+                    f"prefill executable rejected its arguments "
+                    f"({type(e).__name__}: {e}); falling back to jit "
+                    f"dispatch for this engine", RuntimeWarning)
+            return self._prefill_fresh(self.params, tokens, lengths)
+
+    def prefill_cache_size(self) -> int:
+        """Number of compiled prefill entries (AOT executables + any jitted
+        continuation/paged variants) — the serving benchmark's prefill
+        recompile accounting."""
+        n = len(self._prefill_exes) + int(self._prefill._cache_size())
+        for name in ("_prefill_cont", "_prefill_paged0", "_prefill_pagedC"):
+            fn = getattr(self, name, None)
+            if fn is not None:
+                n += int(fn._cache_size())
+        return n
 
     def decode_cache_misses(self) -> int:
         """Number of XLA compilations of the fused decode chunk so far (the
@@ -239,7 +319,10 @@ class _EngineBase:
         from repro import compiler
         if self.tuning_cache is None:
             return contextlib.nullcontext()
-        return compiler.options(tuning_cache=self.tuning_cache)
+        # kv_layout is a strategy dimension: executors staged under this
+        # scope carry it in their cache keys, like the mesh descriptor
+        return compiler.options(tuning_cache=self.tuning_cache,
+                                kv_layout=self.kv_layout)
 
     # -- shared pieces -------------------------------------------------------
 
@@ -299,9 +382,8 @@ class BatchedEngine(_EngineBase):
         lengths = [int(r.prompt.shape[0]) for r in requests]
         s = max(lengths)
         tokens = jnp.stack([self._pad_prompt(r.prompt, s) for r in requests])
-        cache = self.model.init_cache(b, self.max_seq)
-        logits, cache = self._prefill(self.params, tokens, cache,
-                                      jnp.asarray(lengths, jnp.int32))
+        logits, cache = self._prefill_call(tokens,
+                                           jnp.asarray(lengths, jnp.int32))
 
         temps = jnp.asarray([r.temperature for r in requests], jnp.float32)
         top_ks = jnp.asarray([getattr(r, "top_k", 0) or 0 for r in requests],
@@ -322,7 +404,7 @@ class BatchedEngine(_EngineBase):
         tokens = first
         while any(n > 0 for n in remaining):
             cache, tokens, pos, keys, toks = self._chunk_fn(
-                self.params, cache, tokens, pos, keys, temps, top_ks)
+                self.params, cache, tokens, pos, keys, temps, top_ks, None)
             block = np.asarray(toks)          # the chunk's one host sync
             for i in range(b):
                 take = min(remaining[i], block.shape[1])
@@ -351,31 +433,105 @@ class ContinuousEngine(_EngineBase):
     padding-invariant prefill (attention by causal masking, ssm/hybrid by
     masked recurrent-state updates) make the tokens a function of the
     request alone.
+
+    ``kv_layout`` makes KV memory a strategy dimension:
+
+      * ``"dense"`` — one ``(slots, max_seq)`` cache (the PR 3 layout);
+      * ``"paged"`` — KV lives in a pool of ``kv_blocks`` pages of
+        ``block_size`` positions (:mod:`repro.serve.paged`); each slot maps
+        into the pool through a ``(max_blocks,)`` block-table row, pages
+        are reserved at admission and freed at retirement, and peak KV
+        memory is the *pool* size — a policy, not ``slots * max_seq``;
+      * ``"auto"`` — let the tuner's HBM roofline pick
+        (:func:`repro.autotune.pick_kv_layout`).
+
+    ``prefill_chunk`` caps the admission bucket set: prompts longer than it
+    are CHUNKED — split across successive chunk boundaries, one prefill
+    chunk each — so long prompts neither stall the other lanes for a whole
+    prompt-length prefill nor add the largest power-of-two buckets to the
+    jit shape set.
     """
 
     def __init__(self, model: Model, params, max_seq: int = 512,
                  slots: int = 4, chunk: int = 8, min_bucket: int = 16,
-                 tuning_cache=None, batch_sizes=None, aot="auto"):
+                 tuning_cache=None, batch_sizes=None, aot="auto",
+                 kv_layout: str = "dense", block_size: int = 16,
+                 kv_blocks: Optional[int] = None,
+                 prefill_chunk: Optional[int] = None):
+        if kv_layout == "auto":
+            from repro import autotune
+            kv_layout = autotune.pick_kv_layout(
+                model.cfg, slots=slots, max_seq=max_seq,
+                block_size=block_size, cache=tuning_cache)["layout"]
+        if kv_layout == "paged":
+            if max_seq % block_size != 0:
+                raise ValueError(
+                    f"paged layout needs block_size ({block_size}) to "
+                    f"divide max_seq ({max_seq}) so the gathered view is "
+                    f"shape-identical to the dense cache")
+            self.block_size = block_size
+            self.max_blocks = max_seq // block_size
+            self.kv_blocks = int(kv_blocks or slots * self.max_blocks)
+        self.prefill_chunk = prefill_chunk
         super().__init__(model, params, max_seq=max_seq, chunk=chunk,
                          tuning_cache=tuning_cache,
-                         batch_sizes=batch_sizes or (1, slots), aot=aot)
+                         batch_sizes=batch_sizes or (1, slots), aot=aot,
+                         kv_layout=kv_layout)
         self.slots = slots
-        self.buckets = seq_buckets(max_seq, min_bucket)
+        limit = (max_seq if prefill_chunk is None
+                 else max(min(prefill_chunk, max_seq), min_bucket))
+        self.buckets = seq_buckets(limit, min_bucket)
         self._insert = jax.jit(self._insert_slot, donate_argnums=(0,))
+        model_ = self.model
+        if kv_layout == "paged":
+            def paged_prefill(first):
+                def fn(params, tokens, kv, bt_row, state, start, lengths):
+                    return model_.prefill_paged(params, tokens, kv, bt_row,
+                                                state, start, lengths,
+                                                first=first)
+                return jax.jit(fn, donate_argnums=(2,))
+            self._prefill_paged0 = paged_prefill(True)
+            self._prefill_pagedC = paged_prefill(False)
+        else:
+            self._prefill_cont = jax.jit(
+                lambda params, tokens, cache, start, lengths:
+                model_.prefill(params, tokens, cache, start=start,
+                               lengths=lengths, attend_cache=True),
+                donate_argnums=(2,))
         self._reset_state()
 
     # -- device state --------------------------------------------------------
 
     def _reset_state(self) -> None:
         b = self.slots
-        self.cache = self.model.init_cache(b, self.max_seq)
+        if self.kv_layout == "paged":
+            from repro.serve.paged import BlockPool
+            self.cache = self.model.init_paged_cache(
+                b, self.max_seq, n_blocks=self.kv_blocks,
+                block_size=self.block_size)
+            # all-sentinel tables: every lane's writes drop until admission
+            self.block_tables = jnp.full((b, self.max_blocks),
+                                         self.kv_blocks, jnp.int32)
+            self.pool = BlockPool(self.kv_blocks, self.block_size)
+        else:
+            self.cache = self.model.init_cache(b, self.max_seq)
+            self.block_tables = None
+            self.pool = None
         self.tokens = jnp.zeros((b,), jnp.int32)
         self.pos = jnp.zeros((b,), jnp.int32)
         self.keys = jnp.stack(
             [jax.random.PRNGKey(i) for i in range(b)])
         self.temps = jnp.zeros((b,), jnp.float32)
         self.top_ks = jnp.zeros((b,), jnp.int32)
-        self.sched = Scheduler(b)
+        self.sched = Scheduler(b, pool=self.pool)
+        # immutable zero staging template, reused by every paged admission
+        # (never donated): no per-admission init dispatch; dense admissions
+        # need no template at all — the fresh-cache prefill executable
+        # builds its own zero cache
+        self._zero_staging = (self.model.init_prefill_state(1)
+                              if self.kv_layout == "paged" else None)
+        self._staging: Dict[int, object] = {}
+        self._admit_logits: Dict[int, jax.Array] = {}
         self._requests: Dict[int, Request] = {}
         self._stream_keys: Dict[int, jax.Array] = {}
         self._next_id = 0
@@ -438,39 +594,132 @@ class ContinuousEngine(_EngineBase):
                 self.step_chunk()
             return [self.take_output(rid) for rid in rids]
 
+    def _check_request(self, r: Request) -> None:
+        super()._check_request(r)
+        if self.kv_layout == "paged":
+            need = self.pool.blocks_for(
+                int(r.prompt.shape[0]) + max(int(r.max_new_tokens), 0))
+            if need > self.pool.n_blocks:
+                raise ValueError(
+                    f"request needs {need} KV blocks but the pool only has "
+                    f"{self.pool.n_blocks} (block_size "
+                    f"{self.pool.block_size}); raise kv_blocks")
+
     # -- the chunk-boundary loop --------------------------------------------
 
     def step_chunk(self) -> List[int]:
-        """Admit pending requests, then decode one fused chunk.
+        """Admit pending requests, advance in-flight prompt prefills by one
+        chunk each, then decode one fused chunk.
 
         Returns the request ids retired at this boundary."""
         finished: List[int] = []
-        for slot, rid in self.sched.admissions():
-            done = self._admit(slot, rid)
-            if done:
-                finished.append(rid)
-        if not self.sched.busy_slots():
-            return finished
-        self.cache, self.tokens, self.pos, self.keys, toks = self._chunk_fn(
-            self.params, self.cache, self.tokens, self.pos, self.keys,
-            self.temps, self.top_ks)
-        block = np.asarray(toks)              # the chunk's one host sync
-        finished.extend(self.sched.record_chunk(block))
+        self.sched.admissions()               # reserve slots (and KV blocks)
+        for slot, rid in self.sched.prefilling():
+            if self._prefill_advance(slot, rid):      # one chunk per boundary
+                if self._finish_admit(slot, rid):
+                    finished.append(rid)
+        if self.sched.busy_slots():
+            self._before_chunk()              # hook: ShardedEngine pins here
+            self.cache, self.tokens, self.pos, self.keys, toks = \
+                self._chunk_fn(self.params, self.cache, self.tokens,
+                               self.pos, self.keys, self.temps, self.top_ks,
+                               self.block_tables)
+            block = np.asarray(toks)          # the chunk's one host sync
+            slot_of = {s.req_id: i for i, s in enumerate(self.sched.slots)
+                       if not s.free}
+            retired = self.sched.record_chunk(block)
+            for rid in retired:
+                self._park_lane(slot_of[rid])
+            finished.extend(retired)
         for rid in finished:                  # release prompts/keys at retire
             self._requests.pop(rid, None)
             self._stream_keys.pop(rid, None)
         return finished
 
-    def _admit(self, slot: int, rid: int) -> bool:
-        """Prefill ``rid`` into ``slot``; True if it retired immediately."""
+    def _before_chunk(self) -> None:
+        """Hook between boundary admissions and the fused decode chunk —
+        :class:`ShardedEngine` re-pins shardings here so admission-time
+        host updates can never hand the chunk a new jit signature."""
+
+    def _park_lane(self, slot: int) -> None:
+        """Neutralise a freed lane: position past max_seq so its decode
+        writes drop.  Load-bearing for the paged layout — the slot's pages
+        go back to the pool at retirement and may be re-issued, so the
+        lane must never write through its stale block table."""
+        self.pos = self.pos.at[slot].set(self.max_seq)
+
+    def _prefill_advance(self, slot: int, rid: int) -> bool:
+        """Prefill the next prompt chunk of ``rid`` into ``slot``; True
+        when the whole prompt is in the cache.
+
+        Chunks are ``buckets[-1]`` tokens (the prefill-chunk cap); the tail
+        is padded to the smallest bucket that fits, so the executable set
+        stays one-per-bucket whatever the prompt length."""
+        r = self._requests[rid]
+        plen = int(r.prompt.shape[0])
+        start = self.sched.slots[slot].prefill_pos
+        if start == 0:
+            self._begin_admit(slot)
+        take = min(plen - start, self.buckets[-1])
+        bucket = pick_bucket(take, self.buckets)
+        tokens = self._pad_prompt(r.prompt[start:start + take], bucket)[None]
+        lengths = jnp.asarray([take], jnp.int32)
+        if self.kv_layout == "paged":
+            kv, _ = self.model.split_paged_cache(self.cache)
+            args = (self.params, tokens, kv, self.block_tables[slot],
+                    self._staging[slot], jnp.int32(start), lengths)
+            fn = self._prefill_paged0 if start == 0 else self._prefill_pagedC
+            # same AOT-executable discipline as the dense admission path:
+            # one compiled program per (bucket, first-chunk) signature.
+            # No jit fallback here: the pools are DONATED, so re-running
+            # after a partial failure would read deleted buffers — a
+            # mismatch must surface, not silently slow-path
+            exe_key = (tokens.shape, start == 0)
+            exe = self._prefill_exes.get(exe_key)
+            if exe is None:
+                exe = fn.lower(*args).compile()
+                self._prefill_exes[exe_key] = exe
+            logits, kv, staging = exe(*args)
+            _, slot_state = self.model.split_paged_cache(self.cache)
+            self.cache = self.model.merge_paged_cache(kv, slot_state)
+            self._staging[slot] = staging
+        else:
+            if start == 0:
+                logits, cache1 = self._prefill_call(tokens, lengths)
+            else:
+                logits, cache1 = self._prefill_cont(
+                    self.params, tokens, self._staging[slot],
+                    jnp.int32(start), lengths)
+            self._staging[slot] = cache1
+        self._admit_logits[slot] = logits
+        self.sched.prefill_advance(slot, take)
+        return start + take >= plen
+
+    def _begin_admit(self, slot: int) -> None:
+        """Set up the slot for its (possibly multi-chunk) prompt prefill."""
+        if self.kv_layout == "paged":
+            from repro.serve.paged import table_row
+            row = table_row(self.pool.owned(slot), self.max_blocks,
+                            self.kv_blocks)
+            self.block_tables = self.block_tables.at[slot].set(
+                jnp.asarray(row, jnp.int32))
+            self._staging[slot] = self._zero_staging
+        self._park_lane(slot)  # mid-prefill decode writes must drop
+
+    def _finish_admit(self, slot: int, rid: int) -> bool:
+        """The prompt is fully cached: install the slot's decode state and
+        sample the first token; True if it retired immediately."""
         r = self._requests[rid]
         length = int(r.prompt.shape[0])
-        bucket = pick_bucket(length, self.buckets)
-        tokens = self._pad_prompt(r.prompt, bucket)[None]
-        small = self.model.init_cache(1, self.max_seq)
-        logits, small = self._prefill(self.params, tokens, small,
-                                      jnp.asarray([length], jnp.int32))
-        self.cache = self._insert(self.cache, small, slot)
+        logits = self._admit_logits.pop(slot)
+        staging = self._staging.pop(slot)
+        if self.kv_layout == "paged":
+            if staging is not None:           # recurrent state -> its slot
+                kv, slot_state = self.model.split_paged_cache(self.cache)
+                slot_state = self._insert(slot_state, staging, slot)
+                self.cache = self.model.merge_paged_cache(kv, slot_state)
+        else:
+            self.cache = self._insert(self.cache, staging, slot)
 
         rkey = self._stream_keys[rid]
         carry, sub = _split_keys(rkey[None])
@@ -484,7 +733,10 @@ class ContinuousEngine(_EngineBase):
         self.temps = self.temps.at[slot].set(temp[0])
         self.top_ks = self.top_ks.at[slot].set(top_k[0])
         # one tiny host sync per ADMISSION (not per token): the first token
-        return self.sched.record_first(slot, int(np.asarray(first)[0]))
+        done = self.sched.record_first(slot, int(np.asarray(first)[0]))
+        if done:
+            self._park_lane(slot)
+        return done
 
 
 # ---------------------------------------------------------------------------
@@ -514,7 +766,10 @@ class ShardedEngine(ContinuousEngine):
     def __init__(self, model: Model, params, max_seq: int = 512,
                  slots: int = 8, chunk: int = 8, min_bucket: int = 16,
                  tuning_cache=None, batch_sizes=None, aot="auto",
-                 mesh=None, mesh_axis: str = "data"):
+                 mesh=None, mesh_axis: str = "data",
+                 kv_layout: str = "dense", block_size: int = 16,
+                 kv_blocks: Optional[int] = None,
+                 prefill_chunk: Optional[int] = None):
         from repro.sharding import ctx
         mesh = mesh if mesh is not None else ctx.get_mesh()
         if mesh is None:
@@ -533,7 +788,8 @@ class ShardedEngine(ContinuousEngine):
         super().__init__(model, params, max_seq=max_seq, slots=slots,
                          chunk=chunk, min_bucket=min_bucket,
                          tuning_cache=tuning_cache, batch_sizes=batch_sizes,
-                         aot=aot)
+                         aot=aot, kv_layout=kv_layout, block_size=block_size,
+                         kv_blocks=kv_blocks, prefill_chunk=prefill_chunk)
 
     # -- sharded device state ------------------------------------------------
 
@@ -558,10 +814,27 @@ class ShardedEngine(ContinuousEngine):
         super()._reset_state()
         rep, row = self._shardings()
         self.params = jax.device_put(self.params, rep)   # replicate weights
-        small = self.model.init_cache(1, self.max_seq)
+        if self.kv_layout == "paged":
+            # page pools have no slot axis: they live REPLICATED (every
+            # device holds the pool; slots map into it via their tables),
+            # only the recurrent slot state shards over the mesh axis
+            kv, st = self.model.split_paged_cache(self.cache)
+            kv_sh = (None if kv is None
+                     else jax.tree_util.tree_map(lambda _: rep, kv))
+            st_sh = None
+            if st is not None:
+                small = self.model.init_prefill_state(1)
+                st_sh = jax.tree_util.tree_map(
+                    lambda bl, sl: self._cache_sharding(bl, sl), st, small)
+            self._cache_shardings = self.model.merge_paged_cache(kv_sh,
+                                                                 st_sh)
+        else:
+            small = self.model.init_cache(1, self.max_seq)
+            self._cache_shardings = jax.tree_util.tree_map(
+                lambda bl, sl: self._cache_sharding(bl, sl),
+                self.cache, small)
         self.cache = jax.tree_util.tree_map(
-            lambda bl, sl: jax.device_put(bl, self._cache_sharding(bl, sl)),
-            self.cache, small)
+            jax.device_put, self.cache, self._cache_shardings)
         self._pin_slot_state()
 
     def _pin_slot_state(self) -> None:
@@ -569,12 +842,23 @@ class ShardedEngine(ContinuousEngine):
         (no transfer) when already placed — called at chunk boundaries so
         host-side ``.at[slot].set`` admissions can never drift the decode
         chunk onto a new sharding signature (which would recompile)."""
-        _, row = self._shardings()
+        rep, row = self._shardings()
         self.tokens = jax.device_put(self.tokens, row)
         self.pos = jax.device_put(self.pos, row)
         self.keys = jax.device_put(self.keys, row)
         self.temps = jax.device_put(self.temps, row)
         self.top_ks = jax.device_put(self.top_ks, row)
+        # the cache too: admission inserts (whose staging came from the
+        # AOT prefill executable) can leave GSPMD free to re-place the
+        # merged cache; re-pinning keeps the decode chunk on one signature
+        self.cache = jax.tree_util.tree_map(
+            jax.device_put, self.cache, self._cache_shardings)
+        if self.block_tables is not None:
+            # tables index a replicated pool: keep them replicated too
+            self.block_tables = jax.device_put(self.block_tables, rep)
+
+    def _before_chunk(self) -> None:
+        self._pin_slot_state()
 
     def step_chunk(self):
         out = super().step_chunk()

@@ -3,28 +3,42 @@ engine's fixed device slots.
 
 The engine owns a device-resident batch of ``n_slots`` decode lanes; this
 module owns the *policy*: which pending request enters which free slot, which
-sequence-length bucket its prompt is padded to, and when a slot retires.  All
-decisions happen at chunk boundaries — inside a chunk the device runs a fused
-``lax.scan`` with no host involvement, so the scheduler never sees (or
-blocks) individual tokens.
+sequence-length bucket its prompt is padded to, how far its prompt has been
+prefilled (chunked prefill spreads a long prompt over successive chunk
+boundaries), and when a slot retires.  All decisions happen at chunk
+boundaries — inside a chunk the device runs a fused ``lax.scan`` with no
+host involvement, so the scheduler never sees (or blocks) individual tokens.
 
 Shape discipline: prompts are RIGHT-padded to a bucket from
 :func:`seq_buckets` and the decode batch is always exactly ``n_slots`` wide,
 so the jitted prefill/decode functions see a small closed set of shapes —
 after one pass over the buckets there are zero recompiles, whatever traffic
-arrives.
+arrives.  With chunked prefill the bucket set is capped at the engine's
+prefill-chunk size, so long prompts never add the largest power-of-two
+shapes to the jit set.
+
+With a paged KV cache (:mod:`repro.serve.paged`), admission also *reserves*
+blocks: a request is only admitted when the pool can hold its whole span
+(prompt + decode budget), and its pages are returned at retirement — FIFO
+order is preserved (no head-of-line skipping), so a block-starved pool
+defers admissions rather than reordering them.
 """
 from __future__ import annotations
 
+import bisect
 import dataclasses
+import functools
 from collections import deque
-from typing import Deque, Dict, List, Optional, Sequence, Tuple
+from typing import Deque, Dict, List, Sequence, Tuple
 
 __all__ = ["seq_buckets", "pick_bucket", "Scheduler"]
 
 
+@functools.lru_cache(maxsize=None)
 def seq_buckets(max_seq: int, min_bucket: int = 16) -> Tuple[int, ...]:
-    """Power-of-two prompt buckets up to ``max_seq`` (always included)."""
+    """Power-of-two prompt buckets up to ``max_seq`` (always included),
+    ascending.  Cached: every engine over the same ``(max_seq, min_bucket)``
+    shares one tuple instead of recomputing it per construction."""
     if max_seq < 1:
         raise ValueError(f"max_seq must be >= 1, got {max_seq}")
     out = []
@@ -37,12 +51,15 @@ def seq_buckets(max_seq: int, min_bucket: int = 16) -> Tuple[int, ...]:
 
 
 def pick_bucket(n: int, buckets: Sequence[int]) -> int:
-    """The smallest bucket that fits ``n`` tokens."""
-    for b in sorted(buckets):
-        if n <= b:
-            return b
-    raise ValueError(f"prompt of {n} tokens exceeds the largest bucket "
-                     f"{max(buckets)}")
+    """The smallest bucket that fits ``n`` tokens.
+
+    ``buckets`` must be sorted ascending (what :func:`seq_buckets` returns)
+    — the lookup is a bisect, not a scan-and-sort per call."""
+    i = bisect.bisect_left(buckets, n)
+    if i == len(buckets):
+        raise ValueError(f"prompt of {n} tokens exceeds the largest bucket "
+                         f"{buckets[-1]}")
+    return buckets[i]
 
 
 @dataclasses.dataclass
@@ -50,10 +67,18 @@ class _Slot:
     """Host mirror of one device decode lane."""
     req_id: int = -1          # -1: free
     remaining: int = 0        # tokens still owed to the request
+    prefill_pos: int = 0      # prompt positions already prefilled
+    prefill_len: int = 0      # total prompt length (0 once decoding)
 
     @property
     def free(self) -> bool:
         return self.req_id < 0
+
+    @property
+    def prefilling(self) -> bool:
+        """Admitted but the prompt is not fully in the cache yet — the lane
+        decodes discarded padding until the last prefill chunk lands."""
+        return self.req_id >= 0 and self.prefill_pos < self.prefill_len
 
 
 class Scheduler:
@@ -63,25 +88,30 @@ class Scheduler:
 
       * ``submit(req_id, prompt_len, max_new)`` queues a request;
       * ``admissions()`` (at a chunk boundary) pops pending requests into
-        free slots, FIFO — the engine then prefills each admitted request;
+        free slots, FIFO — reserving KV blocks first when a ``pool`` is
+        attached — and marks them prefilling;
+      * ``prefilling()`` lists slots whose prompts still have chunks to
+        prefill; the engine advances each by one chunk per boundary and
+        records progress with ``prefill_advance(slot, n)``;
       * ``record_first(slot, token)`` accounts the token sampled from the
-        prefill logits;
-      * ``record_chunk(tokens)`` accounts one decoded chunk for every busy
-        slot (``tokens``: (n_slots, chunk) host array) and retires slots
-        whose requests are complete.
+        (final) prefill logits;
+      * ``record_chunk(tokens)`` accounts one decoded chunk for every
+        decoding slot (``tokens``: (n_slots, chunk) host array) and retires
+        slots whose requests are complete.
 
     Outputs accumulate in ``outputs[req_id]``; tokens a slot decodes past
     its request's ``max_new_tokens`` (chunks are fixed-length; requests are
     not) are discarded here and never reach the caller.
     """
 
-    def __init__(self, n_slots: int):
+    def __init__(self, n_slots: int, pool=None):
         if n_slots < 1:
             raise ValueError(f"n_slots must be >= 1, got {n_slots}")
         self.slots: List[_Slot] = [_Slot() for _ in range(n_slots)]
         self.pending: Deque[int] = deque()
         self.meta: Dict[int, dict] = {}
         self.outputs: Dict[int, List[int]] = {}
+        self.pool = pool  # repro.serve.paged.BlockPool (or None: dense)
 
     # -- intake --------------------------------------------------------------
 
@@ -95,27 +125,59 @@ class Scheduler:
     # -- chunk-boundary decisions -------------------------------------------
 
     def admissions(self) -> List[Tuple[int, int]]:
-        """(slot index, req_id) pairs to admit now — free slots, FIFO."""
+        """(slot index, req_id) pairs to admit now — free slots, FIFO.
+
+        With a block pool, each admission first reserves pages for the
+        request's whole span (prompt + decode budget); when the head of the
+        queue does not fit, admission stops — later requests never jump
+        ahead of it."""
         out = []
         for i, slot in enumerate(self.slots):
             if not self.pending:
                 break
-            if slot.free:
-                rid = self.pending.popleft()
-                slot.req_id = rid
-                slot.remaining = self.meta[rid]["max_new"]
-                out.append((i, rid))
+            if not slot.free:
+                continue
+            rid = self.pending[0]
+            meta = self.meta[rid]
+            if self.pool is not None:
+                need = self.pool.blocks_for(
+                    meta["prompt_len"] + meta["max_new"])
+                if not self.pool.can_alloc(need):
+                    break
+                self.pool.alloc(i, need)
+            self.pending.popleft()
+            slot.req_id = rid
+            slot.remaining = meta["max_new"]
+            slot.prefill_pos = 0
+            slot.prefill_len = meta["prompt_len"]
+            out.append((i, rid))
         return out
+
+    def prefilling(self) -> List[Tuple[int, int]]:
+        """(slot index, req_id) pairs with prompt chunks still to prefill."""
+        return [(i, s.req_id) for i, s in enumerate(self.slots)
+                if s.prefilling]
+
+    def prefill_advance(self, slot_idx: int, n: int) -> None:
+        """Account ``n`` prompt positions prefilled into ``slot_idx``."""
+        slot = self.slots[slot_idx]
+        slot.prefill_pos = min(slot.prefill_pos + n, slot.prefill_len)
 
     def record_first(self, slot_idx: int, token: int) -> bool:
         """Account the prefill-sampled token; True if the request is already
-        complete (max_new_tokens == 1) and the slot retired."""
+        complete (max_new_tokens == 1) and the slot retired.
+
+        Recording the first token means the prompt is fully in the cache,
+        so this also closes the slot's prefill window — callers that never
+        chunk (the whole prompt in one admission call) need no
+        ``prefill_advance`` at all."""
         slot = self.slots[slot_idx]
+        slot.prefill_pos = slot.prefill_len
         if slot.remaining > 0:
             self.outputs[slot.req_id].append(int(token))
             slot.remaining -= 1
         if slot.remaining == 0:
-            self._retire(slot)
+            self._retire(slot_idx)
             return True
         return False
 
@@ -123,23 +185,28 @@ class Scheduler:
         """Account one decoded chunk; returns req_ids retired this boundary.
 
         ``tokens`` is a (n_slots, chunk) host int array — the single
-        device->host transfer of the chunk."""
+        device->host transfer of the chunk.  Free and still-prefilling
+        slots decoded discarded padding; their rows are skipped."""
         finished = []
         for i, slot in enumerate(self.slots):
-            if slot.free:
+            if slot.free or slot.prefilling:
                 continue
             take = min(slot.remaining, tokens.shape[1])
             self.outputs[slot.req_id].extend(int(t) for t in tokens[i, :take])
             slot.remaining -= take
             if slot.remaining == 0:
                 finished.append(slot.req_id)
-                self._retire(slot)
+                self._retire(i)
         return finished
 
-    @staticmethod
-    def _retire(slot: _Slot) -> None:
+    def _retire(self, slot_idx: int) -> None:
+        slot = self.slots[slot_idx]
         slot.req_id = -1
         slot.remaining = 0
+        slot.prefill_pos = slot.prefill_len = 0
+        if self.pool is not None:
+            self.pool.free(slot_idx)  # every page back; tables re-set on
+            #                           the next admission, never trusted
 
     def pop_output(self, req_id: int) -> List[int]:
         """Collect a request's tokens and drop its records — memory stays
@@ -151,7 +218,9 @@ class Scheduler:
     # -- state ---------------------------------------------------------------
 
     def busy_slots(self) -> List[int]:
-        return [i for i, s in enumerate(self.slots) if not s.free]
+        """Slots actively DECODING (admitted and fully prefilled)."""
+        return [i for i, s in enumerate(self.slots)
+                if not s.free and not s.prefilling]
 
     @property
     def idle(self) -> bool:

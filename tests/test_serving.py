@@ -240,6 +240,36 @@ class TestScheduler:
         assert s.outputs[0] == [9]
         assert s.idle
 
+    def test_bucket_boundary_values(self):
+        """Exact-boundary lookups: a prompt of exactly a bucket's length
+        lands in THAT bucket, not the next one up."""
+        buckets = seq_buckets(64, 16)
+        assert pick_bucket(16, buckets) == 16
+        assert pick_bucket(64, buckets) == 64          # == max_seq
+        assert pick_bucket(17, buckets) == 32
+        assert seq_buckets(64, 16) is buckets          # cached, not rebuilt
+
+    def test_bucket_boundary_admission(self, dense_model):
+        """Engine-level boundary admission: prompt length exactly == a
+        bucket and exactly == max_seq must admit cleanly and stay
+        token-identical to the oracle (the == max_seq prompt has no decode
+        budget left: it gets its one prefill-sampled... zero tokens)."""
+        cfg, model, params = dense_model
+        key = jax.random.PRNGKey(2)
+        at_bucket = Request(prompt=jnp.arange(16) % cfg.vocab,
+                            max_new_tokens=6)
+        at_max = Request(prompt=jnp.arange(64) % cfg.vocab,
+                         max_new_tokens=0)
+        oracle = BatchedEngine(model, params, max_seq=64,
+                               chunk=4).run([at_bucket], key=key)
+        cont = ContinuousEngine(model, params, max_seq=64, slots=2, chunk=4,
+                                min_bucket=8)
+        assert cont.run([at_bucket], key=key) == oracle
+        assert cont.run([at_max], key=key) == [[]]
+        with pytest.raises(ValueError):        # one past max_seq: rejected
+            cont.submit(Request(prompt=jnp.arange(64) % cfg.vocab,
+                                max_new_tokens=1))
+
 
 # ---------------------------------------------------------------------------
 # recompile accounting: bounded shapes, zero recompiles after warm-up
