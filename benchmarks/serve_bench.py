@@ -28,9 +28,11 @@ paged pool must hold >= 2x fewer bytes at equal (+-10%) throughput.
 
 Usage:
   PYTHONPATH=src python benchmarks/serve_bench.py [--smoke] [--long-prompt]
-      [--out FILE]
+      [--out FILE] [--trace FILE] [--metrics-out FILE]
 
-Writes BENCH_serve.json (``--out`` to override) and prints a summary.
+Writes BENCH_serve.json (``--out`` to override; includes a metrics-registry
+snapshot under ``"metrics"``) and prints a summary.  ``--trace`` enables
+``repro.obs`` span tracing and exports a Chrome/Perfetto trace-event JSON.
 """
 from __future__ import annotations
 
@@ -134,21 +136,41 @@ def _mk_requests(cfg, n: int, prompt_len: int, max_new: int):
         max_new_tokens=max_new, temperature=0.0) for i in range(n)]
 
 
-def _timed_runs(engines, reqs, key, repeats: int = 4) -> list:
-    """Per engine: (tokens, best wall time).  The engines are measured
-    INTERLEAVED (legacy, fused, ... repeated) and best-of-N per engine, so
-    slow drift in background load on a shared host cancels out of the
-    ratios instead of biasing whichever engine ran last."""
-    best = [float("inf")] * len(engines)
-    n = [0] * len(engines)
-    for _ in range(repeats):
-        for i, engine in enumerate(engines):
-            t0 = time.perf_counter()
-            outs = engine.run(reqs, key=key)
-            dt = time.perf_counter() - t0
-            n[i] = sum(len(o) for o in outs)
-            best[i] = min(best[i], dt)
-    return list(zip(n, best))
+def timed(thunks: dict, repeats: int = 4) -> dict:
+    """Interleaved best-of-N wall timing: ``{label: thunk}`` ->
+    ``{label: (best_seconds, last_result)}``.
+
+    The ONE timing loop of this benchmark (prefill, decode, and the paged
+    section all go through it).  Labels are measured interleaved
+    (a, b, a, b, ... repeated) and best-of-N per label, so slow drift in
+    background load on a shared host cancels out of cross-label ratios
+    instead of biasing whichever label ran last.  Every invocation runs
+    under an ``obs.span`` and each label's best time lands in the metrics
+    registry (``bench.<label>.best_s``), so the numbers BENCH_serve.json
+    reports and the numbers in the exported metrics/trace are the same
+    measurements."""
+    from repro import obs
+    best = {k: float("inf") for k in thunks}
+    result = {k: None for k in thunks}
+    for rep in range(repeats):
+        for k, fn in thunks.items():
+            with obs.span(f"bench.{k}", rep=rep):
+                t0 = time.perf_counter()
+                result[k] = fn()
+                dt = time.perf_counter() - t0
+            best[k] = min(best[k], dt)
+    for k, v in best.items():
+        obs.gauge(f"bench.{k}.best_s").set(v)
+    return {k: (best[k], result[k]) for k in thunks}
+
+
+def _timed_runs(engines, reqs, key, repeats: int = 4, labels=None) -> list:
+    """Per engine: (tokens, best wall time) via :func:`timed`."""
+    labels = labels or [f"engine{i}" for i in range(len(engines))]
+    thunks = {lb: (lambda e=e: e.run(reqs, key=key))
+              for lb, e in zip(labels, engines)}
+    res = timed(thunks, repeats=repeats)
+    return [(sum(len(o) for o in res[lb][1]), res[lb][0]) for lb in labels]
 
 
 def main() -> None:
@@ -162,12 +184,21 @@ def main() -> None:
                     help="compute-heavier model (reports speedup without "
                          "asserting it — it is hardware-dependent there)")
     ap.add_argument("--out", default="BENCH_serve.json")
+    ap.add_argument("--trace", default=None, metavar="FILE",
+                    help="enable span tracing and export a Chrome/Perfetto "
+                         "trace-event JSON to FILE")
+    ap.add_argument("--metrics-out", default=None, metavar="FILE",
+                    help="also export the metrics registry snapshot as "
+                         "JSON to FILE")
     ap.add_argument("--no-assert", action="store_true",
                     help="report only; do not enforce speedup/recompiles")
     args = ap.parse_args()
 
-    from repro import compiler
+    from repro import compiler, obs
     from repro.serve.engine import BatchedEngine, ContinuousEngine, Request
+
+    if args.trace:
+        obs.enable()
 
     cfg, model, params = _mk_model(args.full)
     max_new = 32 if args.smoke else 64
@@ -217,13 +248,12 @@ def main() -> None:
     reps = 11 if args.smoke else 21
     prefill_s = prefill_legacy_s = 1.0
     best_ratio = float("inf")
+    prefill_thunks = {
+        f"prefill_{k}": (lambda fn=fn: jax.block_until_ready(fn()[0]))
+        for k, fn in prefill_fns.items()}
     for _attempt in range(3):                 # ride out host load spikes
-        best = {k: float("inf") for k in prefill_fns}
-        for _ in range(reps):                 # interleaved best-of-N
-            for k, fn in prefill_fns.items():
-                t0 = time.perf_counter()
-                jax.block_until_ready(fn()[0])
-                best[k] = min(best[k], time.perf_counter() - t0)
+        res = timed(prefill_thunks, repeats=reps)
+        best = {k: res[f"prefill_{k}"][0] for k in prefill_fns}
         if best["fused"] / best["legacy"] < best_ratio:
             best_ratio = best["fused"] / best["legacy"]
             prefill_s, prefill_legacy_s = best["fused"], best["legacy"]
@@ -239,8 +269,8 @@ def main() -> None:
     t0 = time.perf_counter()
     fused.run(reqs, key=key)                       # warm/compile
     t_warm = time.perf_counter() - t0
-    (n_leg, t_leg_e2e), (n_fus, t_fus) = _timed_runs([legacy, fused], reqs,
-                                                     key)
+    (n_leg, t_leg_e2e), (n_fus, t_fus) = _timed_runs(
+        [legacy, fused], reqs, key, labels=["legacy", "fused"])
     t_leg = max(t_leg_e2e - prefill_legacy_s, 1e-9)
     t_fus = max(t_fus - prefill_s, 1e-9)
     print(f"  legacy      {n_leg / t_leg:9.1f} tok/s   "
@@ -261,7 +291,8 @@ def main() -> None:
     compiles_warm = cont.decode_cache_misses()
     prefill_compiles_warm = cont.prefill_cache_size()
 
-    [(n_cont, t_cont)] = _timed_runs([cont], reqs, key)
+    [(n_cont, t_cont)] = _timed_runs([cont], reqs, key,
+                                     labels=["continuous"])
     compiles_after = cont.decode_cache_misses()
     prefill_compiles_after = cont.prefill_cache_size()
     recompiles = (compiles_after - compiles_warm) + (
@@ -345,7 +376,8 @@ def main() -> None:
         for _attempt in range(3):             # ride out host load spikes
             (a_n_d, a_t_d), (a_n_p, a_t_p) = _timed_runs(
                 [dense_eng, paged_eng], lp_reqs, lp_key,
-                repeats=2 if args.smoke else 4)
+                repeats=2 if args.smoke else 4,
+                labels=["dense", "paged"])
             r = (a_n_p / a_t_p) / (a_n_d / a_t_d)
             if r > tok_ratio:                 # keep the whole attempt's
                 tok_ratio = r                 # numbers, so the committed
@@ -416,9 +448,29 @@ def main() -> None:
     }
     if long_doc is not None:
         doc["long_prompt"] = long_doc
+
+    # the reported numbers go through the metrics registry too, so the
+    # snapshot embedded below (and any --metrics-out export) carries them
+    # alongside the serving spine's own counters/histograms
+    for name, v in (("bench.prefill.latency_ms", prefill_s * 1e3),
+                    ("bench.legacy.tok_s", n_leg / t_leg),
+                    ("bench.fused.tok_s", n_fus / t_fus),
+                    ("bench.continuous.tok_s", n_cont / t_cont),
+                    ("bench.speedup_fused_vs_legacy", speedup),
+                    ("bench.recompiles_after_warmup", recompiles)):
+        obs.gauge(name).set(v)
+    doc["metrics"] = obs.metrics_snapshot()
+
     with open(args.out, "w") as f:
         json.dump(doc, f, indent=1, sort_keys=True)
     print(f"  wrote {args.out}")
+    if args.trace:
+        obs.export_trace(args.trace)
+        print(f"  wrote {args.trace} ({len(obs.trace_events())} events; "
+              f"load in https://ui.perfetto.dev)")
+    if args.metrics_out:
+        obs.export_metrics(args.metrics_out)
+        print(f"  wrote {args.metrics_out}")
 
     if not args.no_assert:
         assert recompiles == 0, \

@@ -1,0 +1,121 @@
+"""Schema validation for the observability artefacts CI uploads.
+
+Checks (stdlib only, no jsonschema dependency):
+
+  * a trace file is Chrome/Perfetto trace-event JSON — a ``traceEvents``
+    list whose every event has a string ``name``, a known phase (``X``
+    complete events carry numeric ``ts``/``dur``; ``i`` instants carry
+    ``ts`` and scope ``s``), and integer ``pid``/``tid``;
+  * a metrics file is a ``{name: snapshot}`` dict whose every snapshot has
+    a known ``type`` with that type's required fields;
+  * a BENCH_serve.json carries its embedded ``metrics`` snapshot with the
+    benchmark's reported gauges present.
+
+Usage:
+  python benchmarks/validate_trace.py --trace trace.json \
+      [--metrics metrics.json] [--bench BENCH_serve.json]
+
+Exits non-zero with a message naming the first offending record, so a CI
+failure points at the event, not just the file.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+_PHASES = {"X", "i", "B", "E", "M"}
+_METRIC_FIELDS = {
+    "counter": ("value",),
+    "gauge": ("value",),
+    "histogram": ("count", "total", "mean", "buckets"),
+}
+
+
+def fail(msg: str) -> None:
+    print(f"validate_trace: FAIL: {msg}", file=sys.stderr)
+    raise SystemExit(1)
+
+
+def validate_trace(path: str) -> int:
+    with open(path) as f:
+        doc = json.load(f)
+    if not isinstance(doc, dict) or "traceEvents" not in doc:
+        fail(f"{path}: not a trace-event document (no 'traceEvents')")
+    events = doc["traceEvents"]
+    if not isinstance(events, list) or not events:
+        fail(f"{path}: 'traceEvents' must be a non-empty list")
+    for i, ev in enumerate(events):
+        where = f"{path}: traceEvents[{i}]"
+        if not isinstance(ev, dict):
+            fail(f"{where}: not an object")
+        if not isinstance(ev.get("name"), str) or not ev["name"]:
+            fail(f"{where}: missing/empty 'name'")
+        ph = ev.get("ph")
+        if ph not in _PHASES:
+            fail(f"{where} ({ev['name']!r}): unknown phase {ph!r}")
+        if ph in ("X", "i"):
+            if not isinstance(ev.get("ts"), (int, float)):
+                fail(f"{where} ({ev['name']!r}): non-numeric 'ts'")
+        if ph == "X":
+            if not isinstance(ev.get("dur"), (int, float)) or ev["dur"] < 0:
+                fail(f"{where} ({ev['name']!r}): bad 'dur'")
+        if ph == "i" and ev.get("s") not in ("t", "p", "g"):
+            fail(f"{where} ({ev['name']!r}): instant scope {ev.get('s')!r}")
+        for k in ("pid", "tid"):
+            if not isinstance(ev.get(k), int):
+                fail(f"{where} ({ev['name']!r}): non-integer {k!r}")
+    return len(events)
+
+
+def validate_metrics(snap: dict, where: str) -> int:
+    if not isinstance(snap, dict) or not snap:
+        fail(f"{where}: metrics snapshot must be a non-empty dict")
+    for name, m in snap.items():
+        if not isinstance(m, dict):
+            fail(f"{where}: metric {name!r} is not an object")
+        t = m.get("type")
+        if t not in _METRIC_FIELDS:
+            fail(f"{where}: metric {name!r} has unknown type {t!r}")
+        for field in _METRIC_FIELDS[t]:
+            if field not in m:
+                fail(f"{where}: {t} {name!r} missing field {field!r}")
+    return len(snap)
+
+
+def validate_bench(path: str) -> int:
+    with open(path) as f:
+        doc = json.load(f)
+    if "metrics" not in doc:
+        fail(f"{path}: no embedded 'metrics' snapshot")
+    n = validate_metrics(doc["metrics"], f"{path}[metrics]")
+    for gauge in ("bench.fused.tok_s", "bench.continuous.tok_s",
+                  "bench.prefill.latency_ms"):
+        if gauge not in doc["metrics"]:
+            fail(f"{path}: reported gauge {gauge!r} absent from metrics")
+    return n
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--trace", default=None)
+    ap.add_argument("--metrics", default=None)
+    ap.add_argument("--bench", default=None)
+    args = ap.parse_args()
+    if not (args.trace or args.metrics or args.bench):
+        fail("nothing to validate: pass --trace/--metrics/--bench")
+    if args.trace:
+        n = validate_trace(args.trace)
+        print(f"validate_trace: {args.trace}: {n} events OK")
+    if args.metrics:
+        with open(args.metrics) as f:
+            n = validate_metrics(json.load(f), args.metrics)
+        print(f"validate_trace: {args.metrics}: {n} metrics OK")
+    if args.bench:
+        n = validate_bench(args.bench)
+        print(f"validate_trace: {args.bench}: embedded metrics "
+              f"({n}) OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -26,6 +26,7 @@ import functools
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Union
 
+from repro import obs
 from repro.compiler import Program
 from repro.core.dpia import phrases as P
 
@@ -57,6 +58,32 @@ def _resolve_cache(cache) -> TuningCache:
     if isinstance(cache, TuningCache):
         return cache
     return TuningCache(str(cache))
+
+
+def _decision_kind(kernel: str, backend: str) -> str:
+    return "mesh" if backend == "shardmap" else "kernel"
+
+
+def _roofline_terms(cand) -> Dict[str, float]:
+    """The chosen candidate's CostEstimate as a plain dict (provenance)."""
+    from . import cost as cost_mod
+    try:
+        expr, _ = cand.build()
+        est = cost_mod.estimate(expr)
+    except Exception:
+        return {}
+    return {k: float(v) for k, v in vars(est).items() if v}
+
+
+def _record_decision(kernel: str, key: str, params: Dict[str, object],
+                     origin: str, *, backend: str, dtype: str, mesh: str,
+                     layout: str, shape: Dict[str, object],
+                     cost_s=None, terms=None, measured_us=None,
+                     n_candidates: int = 0, note: str = "") -> None:
+    obs.record(_decision_kind(kernel, backend), kernel, key, params, origin,
+               shape=dict(shape), dtype=dtype, backend=backend, mesh=mesh,
+               layout=layout, cost_s=cost_s, terms=dict(terms or {}),
+               measured_us=measured_us, n_candidates=n_candidates, note=note)
 
 
 def tune(spec: Spec, *, backend: str = "jnp", dtype: str = "float32",
@@ -143,6 +170,15 @@ def tune(spec: Spec, *, backend: str = "jnp", dtype: str = "float32",
     if cached is not None and not force:
         # an analytic-only record is upgraded when measurement is requested
         if not measure or cached.get("source") == "measured":
+            _record_decision(
+                kernel, key, dict(cached["params"]),
+                f"cache({cached.get('source', 'analytic')})",
+                backend=backend, dtype=dtype, mesh=mesh_desc, layout=layout,
+                shape=dict(cached.get("shape", shape)),
+                cost_s=cached.get("cost_s"),
+                terms=cached.get("roofline"),
+                measured_us=cached.get("measured_us"),
+                n_candidates=int(cached.get("n_candidates", 0)))
             return TuneResult(
                 kernel=kernel, key=key, params=dict(cached["params"]),
                 source="cache", cost_s=cached.get("cost_s"),
@@ -150,37 +186,39 @@ def tune(spec: Spec, *, backend: str = "jnp", dtype: str = "float32",
                 timings=dict(cached.get("timings", {})),
                 n_candidates=int(cached.get("n_candidates", 0)))
 
-    if isinstance(spec, str):
-        if backend == "shardmap":
-            # mesh-placement space, enumerated from the descriptor alone
-            axes = mesh_mod.parse_descriptor(mesh_desc)
-            cands = mesh_mod.mesh_space(kernel, axes, **shape)
-            try:
-                default = mesh_mod.mesh_candidate_from_params(
-                    kernel, mesh_mod.default_mesh_params(kernel, axes,
-                                                         **shape),
-                    axes, **shape)
-            except ValueError:
-                default = None
+    with obs.span("autotune.enumerate", kernel=kernel, backend=backend,
+                  mesh=mesh_desc):
+        if isinstance(spec, str):
+            if backend == "shardmap":
+                # mesh-placement space, enumerated from the descriptor alone
+                axes = mesh_mod.parse_descriptor(mesh_desc)
+                cands = mesh_mod.mesh_space(kernel, axes, **shape)
+                try:
+                    default = mesh_mod.mesh_candidate_from_params(
+                        kernel, mesh_mod.default_mesh_params(kernel, axes,
+                                                             **shape),
+                        axes, **shape)
+                except ValueError:
+                    default = None
+            else:
+                cands = space_mod.enumerate_space(kernel, **shape)
+                try:
+                    default = space_mod.candidate_from_params(
+                        kernel, space_mod.default_params(kernel, **shape),
+                        **shape)
+                except ValueError:
+                    default = None
         else:
-            cands = space_mod.enumerate_space(kernel, **shape)
-            try:
-                default = space_mod.candidate_from_params(
-                    kernel, space_mod.default_params(kernel, **shape),
-                    **shape)
-            except ValueError:
-                default = None
-    else:
-        cands = space_mod.rewrite_candidates(spec, arg_vars)
-        default = cands[0]  # the identity rewrite
+            cands = space_mod.rewrite_candidates(spec, arg_vars)
+            default = cands[0]  # the identity rewrite
 
-    if not cands:
-        raise ValueError(
-            f"tune: empty strategy space for {kernel!r} at shape {shape!r} "
-            f"on mesh {mesh_desc!r} (no block size / mesh axis divides the "
-            f"extents?)")
+        if not cands:
+            raise ValueError(
+                f"tune: empty strategy space for {kernel!r} at shape "
+                f"{shape!r} on mesh {mesh_desc!r} (no block size / mesh "
+                f"axis divides the extents?)")
 
-    ranked = measure_mod.rank_by_cost(cands)
+        ranked = measure_mod.rank_by_cost(cands)
     chosen, chosen_cost = ranked[0]
     timings: Dict[str, float] = {}
     measured_us = None
@@ -191,10 +229,12 @@ def tune(spec: Spec, *, backend: str = "jnp", dtype: str = "float32",
         if default is not None and all(p.params != default.params
                                        for p in pick):
             pick.append(default)
-        timings = measure_mod.measure_candidates(
-            pick, backend=backend, iters=iters,
-            verify_against=default if verify else None,
-            compile_kw=measure_kw)
+        with obs.span("autotune.measure", kernel=kernel, backend=backend,
+                      n_candidates=len(pick)):
+            timings = measure_mod.measure_candidates(
+                pick, backend=backend, iters=iters,
+                verify_against=default if verify else None,
+                compile_kw=measure_kw)
         if timings:
             by_key = {cand.params_key(): cand for cand in pick}
             best_key = min(timings, key=lambda k2: (timings[k2], k2))
@@ -204,14 +244,21 @@ def tune(spec: Spec, *, backend: str = "jnp", dtype: str = "float32",
             measured_us = timings[best_key]
             source = "measured"
 
+    terms = _roofline_terms(chosen)
     record = {
         "kernel": kernel, "params": chosen.params_dict, "source": source,
         "cost_s": chosen_cost if chosen_cost != float("inf") else None,
         "measured_us": measured_us, "timings": timings,
         "shape": dict(shape), "backend": backend, "dtype": dtype,
         "mesh": mesh_desc, "n_candidates": len(cands),
+        "roofline": terms,
     }
     c.put(key, record)
+    _record_decision(kernel, key, chosen.params_dict, source,
+                     backend=backend, dtype=dtype, mesh=mesh_desc,
+                     layout=layout, shape=shape, cost_s=record["cost_s"],
+                     terms=terms, measured_us=measured_us,
+                     n_candidates=len(cands))
     return TuneResult(kernel=kernel, key=key, params=chosen.params_dict,
                       source=source, cost_s=record["cost_s"],
                       measured_us=measured_us, timings=timings,
@@ -257,8 +304,22 @@ def pick_kv_layout(cfg, *, slots: int, max_seq: int, block_size: int = 16,
              "expected": int(expected_seq or 0), "layers": layers,
              "kv": cfg.n_kv_heads, "hd": cfg.hd}
     key = make_key("kv_layout", shape, str(cfg.dtype), str(plat), "single")
+
+    def _record_kv(params: Dict[str, object], origin: str) -> None:
+        obs.record(
+            "kv_layout", "kv_layout", key, {"layout": params["layout"]},
+            origin, shape=dict(shape), dtype=str(cfg.dtype),
+            backend=str(plat), mesh="single", layout=params["layout"],
+            cost_s=params.get(f"{params['layout']}_s"),
+            terms={"dense_bytes": float(params.get("dense_bytes", 0)),
+                   "paged_bytes": float(params.get("paged_bytes", 0)),
+                   "dense_s": float(params.get("dense_s", 0.0)),
+                   "paged_s": float(params.get("paged_s", 0.0))},
+            n_candidates=2)
+
     cached = c.get(key)
     if cached is not None and not force:
+        _record_kv(dict(cached["params"]), "cache(analytic)")
         return dict(cached["params"])
     if layers == 0:
         # no attention cache at all (ssm): the layouts are the same thing
@@ -280,6 +341,7 @@ def pick_kv_layout(cfg, *, slots: int, max_seq: int, block_size: int = 16,
                 "shape": shape, "backend": str(plat),
                 "dtype": str(cfg.dtype), "mesh": "single",
                 "n_candidates": 2})
+    _record_kv(record, "analytic")
     return record
 
 

@@ -14,6 +14,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro import obs
 from repro.core.dpia import phrases as P
 from repro.core.dpia.types import dtype_of, shape_of
 
@@ -95,14 +96,19 @@ def measure_candidates(cands: Sequence[Candidate], *, backend: str = "jnp",
 
     out: Dict[str, float] = {}
     for c in cands:
-        try:
-            fn, args = compile_candidate(c, backend, compile_kw)
-            if ref_out is not None:
-                got = np.asarray(jax.block_until_ready(fn(*args)))
-                np.testing.assert_allclose(got, ref_out, rtol=1e-3, atol=1e-4)
-            out[c.params_key()] = time_callable(fn, args, iters=iters)
-        except Exception:
-            continue
+        with obs.span("autotune.measure_candidate", backend=backend,
+                      params=c.params_key()):
+            try:
+                fn, args = compile_candidate(c, backend, compile_kw)
+                if ref_out is not None:
+                    got = np.asarray(jax.block_until_ready(fn(*args)))
+                    np.testing.assert_allclose(got, ref_out, rtol=1e-3,
+                                               atol=1e-4)
+                out[c.params_key()] = time_callable(fn, args, iters=iters)
+            except Exception:
+                obs.event("autotune.candidate_failed", backend=backend,
+                          params=c.params_key())
+                continue
     return out
 
 

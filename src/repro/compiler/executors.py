@@ -26,6 +26,8 @@ import os
 import threading
 from typing import Callable, Dict, Optional, Tuple
 
+from repro import obs
+
 __all__ = ["ExecutorCache", "make_key", "default_cache"]
 
 # v2: make_key gained the mesh-descriptor component; v3: the kv_layout
@@ -85,12 +87,15 @@ class ExecutorCache:
         if fn is not None:
             with self._lock:
                 self._hits += 1
+            obs.event("executor_cache.hit", key=key)
             return fn
-        fn = build()
+        with obs.span("executor_cache.build", key=key):
+            fn = build()
         with self._lock:
             self._builds += 1
             if meta:
                 self._meta.setdefault(key, dict(meta))
+        obs.counter("executor_cache.builds").inc()
         return self._mem.setdefault(key, fn)
 
     def put(self, key: str, fn, *, meta: Optional[dict] = None) -> None:
@@ -207,11 +212,25 @@ class ExecutorCache:
                 kw = {}
                 if "interpret" in b.accepts:
                     kw["interpret"] = bool(doc.get("interpret", True))
-                fn = prog.compile(b, jit=bool(doc.get("jit", True)), **kw)
+                with obs.span("executor_cache.aot_load", key=key,
+                              backend=doc["backend"]):
+                    fn = prog.compile(b, jit=bool(doc.get("jit", True)),
+                                      **kw)
                 self.put(key, fn, meta={"interpret": doc.get("interpret"),
                                         "jit": doc.get("jit")})
                 with self._lock:
                     self._aot_loads += 1
+                obs.counter("executor_cache.aot_loads").inc()
+                # the staged strategy arrived via the AOT store: record it
+                # (the params component is the 7th field of the canonical
+                # key — see make_key)
+                parts = key.split("|")
+                obs.record("executor", prog.kernel or prog.name, key,
+                           {"params": parts[6] if len(parts) > 6 else "?"},
+                           "aot-loaded", shape=dict(prog.shape),
+                           backend=doc["backend"],
+                           note=f"program {prog.name!r} rebuilt from "
+                                f"{directory}")
                 loaded += 1
             except (OSError, ValueError, KeyError, TypeError):
                 # TypeError: an artefact whose backend now has unmet compile

@@ -30,6 +30,7 @@ import os
 import tempfile
 from typing import Callable, Dict, List, Optional, Sequence, Union
 
+from repro import obs
 from repro.core.dpia import check as check_mod
 from repro.core.dpia import phrases as P
 from repro.core.dpia import stage1, stage2
@@ -128,10 +129,11 @@ class Program:
             if self.expr is None:
                 raise ValueError("program has neither a functional term nor "
                                  "an imperative command")
-            d = P.exp_data(self.expr)
-            out = P.Var(OUT_NAME, AccT(d))
-            self._cmd = stage2.expand(stage1.translate(self.expr, out))
-            self._out = out
+            with obs.span("compiler.lower", program=self.name):
+                d = P.exp_data(self.expr)
+                out = P.Var(OUT_NAME, AccT(d))
+                self._cmd = stage2.expand(stage1.translate(self.expr, out))
+                self._out = out
         return self._cmd, self._out
 
     @property
@@ -146,7 +148,8 @@ class Program:
 
         Raises ``DpiaTypeError`` / ``RaceError`` on violation."""
         cmd, _ = self._translated()
-        check_mod.check(cmd)
+        with obs.span("compiler.check", program=self.name):
+            check_mod.check(cmd)
         self._checked = True
         return self
 
@@ -237,7 +240,8 @@ class Program:
         if "check" in b.accepts:
             # an already-checked program need not be re-checked in Stage III
             call_kw.setdefault("check", not self._checked)
-        fn = b.compile(self.expr, self.arg_vars, **call_kw)
+        with obs.span("compiler.compile", program=self.name, backend=b.name):
+            fn = b.compile(self.expr, self.arg_vars, **call_kw)
         if jit if jit is not None else opts.jit:
             import jax
             fn = jax.jit(fn)

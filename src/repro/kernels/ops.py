@@ -31,15 +31,18 @@ delegate to ``repro.compiler.set_default_options``.
 """
 from __future__ import annotations
 
+import logging
 import threading
 import warnings
 from typing import Callable, Dict, Optional, Tuple
 
 import jax.numpy as jnp
 
-from repro import compiler
+from repro import compiler, obs
 from repro.compiler import CompileOptions, current_options
 from repro.compiler import executors as _executors
+
+log = logging.getLogger("repro.kernels.ops")
 
 from . import dpia_blas, ref
 from .flash_attention import flash_attention as _fa_pallas
@@ -101,10 +104,21 @@ def clear_caches() -> None:
 
 
 def _warn_once(key: Tuple, msg: str) -> None:
+    """One-shot degradation signal, emitted three ways: a structured obs
+    event + always-on counter (machine-readable: dashboards, the bench's
+    metrics snapshot), the module logger (operator logs), and the original
+    ``RuntimeWarning`` (back-compat: tests and callers that filter
+    warnings keep working).  The counter/logger fire even when the warning
+    has already been shown — the *event stream* should see every
+    occurrence; only the warning is once-per-key."""
+    obs.counter("kernels.fallbacks").inc()
+    obs.event("kernels.fallback", kind=str(key[0]),
+              key="/".join(str(k) for k in key), msg=msg)
     with _LOCK:
         if key in _warned:
             return
         _warned.add(key)
+    log.warning("%s", msg)
     warnings.warn(msg, RuntimeWarning, stacklevel=4)
 
 
@@ -182,6 +196,23 @@ def _default_params(kernel: str, **shape) -> Dict[str, object]:
     return _sp.default_params(kernel, **shape)
 
 
+def _record_default(kernel: str, backend: str, opts: CompileOptions,
+                    shape: Dict[str, int], origin: str, note: str) -> None:
+    """Provenance for the paths that DON'T go through the tuner: the
+    kernel ran its canonical default strategy, and `obs.explain()` should
+    say so (and why) rather than show a hole."""
+    from repro.autotune import cache as _tc
+    try:
+        params = _default_params(kernel, **shape)
+    except Exception:
+        params = {}
+    key = _tc.make_key(kernel, shape, "float32", backend,
+                       opts.mesh_descriptor(), layout=opts.kv_layout)
+    obs.record("kernel", kernel, key, params, origin, shape=dict(shape),
+               backend=backend, mesh=opts.mesh_descriptor(),
+               layout=opts.kv_layout, note=note)
+
+
 def _tuned_or_default(kernel: str, backend: str, opts: CompileOptions,
                       shape: Dict[str, int]) -> compiler.CompiledKernel:
     """The op-layer DPIA path: tuned candidate if available+buildable, else
@@ -199,6 +230,13 @@ def _tuned_or_default(kernel: str, backend: str, opts: CompileOptions,
                        f"{backend!r}) failed to build/compile: "
                        f"{type(e).__name__}: {e}; using the default "
                        f"strategy params")
+            _record_default(kernel, backend, opts, shape, "fallback-default",
+                            f"tuned params {params!r} failed to build")
+    else:
+        _record_default(
+            kernel, backend, opts, shape, "default",
+            "autotune disabled in options" if not opts.autotune
+            else "no tuned entry (lookup failed or returned nothing)")
 
     def build_default(shape=shape):
         from repro.autotune import space as _sp
@@ -471,7 +509,11 @@ def _matmul_pallas(impl, opts, a, b, out_dtype=None):
 
 def _matmul_compiled(backend: str, opts: CompileOptions, m: int, k: int,
                      n: int):
-    params = _tuned("matmul", backend, opts, m=m, k=k, n=n) or {}
+    params = _tuned("matmul", backend, opts, m=m, k=k, n=n)
+    if params is None:
+        _record_default("matmul", backend, opts, dict(m=m, k=k, n=n),
+                        "default", "no tuned entry")
+    params = params or {}
     defaults = _default_params("matmul", m=m, k=k, n=n)
     bm, bk = params.get("bm"), params.get("bk")
     if not (isinstance(bm, int) and bm > 0 and m % bm == 0):
@@ -517,7 +559,11 @@ def _rmsnorm_pallas(impl, opts, x, w, eps=1e-6):
 
 def _rmsnorm_compiled(backend: str, opts: CompileOptions, rows: int, d: int,
                       eps: float = 1e-6):
-    params = _tuned("rmsnorm", backend, opts, rows=rows, d=d) or {}
+    params = _tuned("rmsnorm", backend, opts, rows=rows, d=d)
+    if params is None:
+        _record_default("rmsnorm", backend, opts, dict(rows=rows, d=d),
+                        "default", "no tuned entry")
+    params = params or {}
     rb = params.get("row_block")
     if not (isinstance(rb, int) and rb > 0 and rows % rb == 0):
         # malformed/missing cache entry; eps is threaded separately, so the
@@ -561,7 +607,11 @@ def _softmax_ref(impl, opts, x, axis=-1):
 
 
 def _softmax_compiled(backend: str, opts: CompileOptions, rows: int, d: int):
-    params = _tuned("softmax", backend, opts, rows=rows, d=d) or {}
+    params = _tuned("softmax", backend, opts, rows=rows, d=d)
+    if params is None:
+        _record_default("softmax", backend, opts, dict(rows=rows, d=d),
+                        "default", "no tuned entry")
+    params = params or {}
     rb = params.get("row_block")
     if not (isinstance(rb, int) and rb > 0 and rows % rb == 0):
         rb = _default_params("softmax", rows=rows, d=d)["row_block"]

@@ -1,0 +1,69 @@
+"""repro.obs — tracing, metrics, and strategy provenance for the spine.
+
+The compiler's claim ("the chosen strategy is preserved end to end") and
+the serving engines' invariants ("token-identical, zero recompiles after
+warm-up") are asserted by tests; this package makes them *observable* in
+any run:
+
+  trace       span tracer (thread-local stacks, monotonic clocks,
+              near-zero overhead disabled) with Chrome/Perfetto JSON
+              export — ``obs.enable()``, ``with obs.span("name"): ...``,
+              ``obs.export_trace("trace.json")``, load in
+              https://ui.perfetto.dev
+  metrics     always-on process registry of counters / gauges /
+              histograms — ``obs.counter("x").inc()``,
+              ``obs.metrics_snapshot()``
+  provenance  a record per tuned decision (kernel strategy, mesh
+              placement, KV layout): inputs, predicted roofline terms,
+              measured time, cache origin — ``print(obs.explain())``
+
+The instrumented spine: ``Program.check/lower/compile`` spans, executor
+cache build/hit/AOT events, autotune enumeration + measurement spans,
+serving per-chunk spans, per-request lifecycle metrics (queue wait, TTFT,
+decode tok/s), KV pool occupancy gauges, and a recompile detector that
+flags jit-cache growth after engine warm-up.  ``Engine.stats()`` is the
+one-call summary.  See docs/observability.md.
+
+Tracing defaults off; enable programmatically or with ``REPRO_TRACE=1``
+(a path value also exports at exit).  Metrics and provenance are always
+on — they only run at boundaries (tuning, staging, chunk edges), never in
+a hot loop.
+"""
+from __future__ import annotations
+
+from . import metrics, provenance, trace  # noqa: F401
+from .metrics import (  # noqa: F401
+    MetricsRegistry, counter, gauge, histogram, registry,
+)
+from .metrics import export as export_metrics  # noqa: F401
+from .metrics import reset as metrics_reset  # noqa: F401
+from .metrics import snapshot as metrics_snapshot  # noqa: F401
+from .provenance import (  # noqa: F401
+    Decision, ProvenanceLog, decisions, explain, record,
+)
+from .provenance import clear as clear_decisions  # noqa: F401
+from .provenance import log as provenance_log  # noqa: F401
+from .trace import (  # noqa: F401
+    Tracer, disable, enable, enabled, instant, span, to_chrome, traced,
+    tracer,
+)
+from .trace import clear as clear_trace  # noqa: F401
+from .trace import events as trace_events  # noqa: F401
+from .trace import export as export_trace  # noqa: F401
+
+# ``instant`` under its semantic alias: a structured point event
+event = instant
+
+__all__ = [
+    # tracing
+    "Tracer", "tracer", "enable", "disable", "enabled", "span", "traced",
+    "instant", "event", "trace_events", "clear_trace", "to_chrome",
+    "export_trace",
+    # metrics
+    "MetricsRegistry", "registry", "counter", "gauge", "histogram",
+    "metrics_snapshot", "metrics_reset", "export_metrics",
+    # provenance
+    "Decision", "ProvenanceLog", "record", "decisions", "explain",
+    "clear_decisions", "provenance_log",
+    "metrics", "provenance", "trace",
+]

@@ -1,0 +1,187 @@
+"""Strategy provenance: who picked what, from which inputs, and why.
+
+The pipeline's claim is that tuned decisions — kernel rewrite params, mesh
+placement, serving KV layout — are *preserved* end to end.  This module
+makes each decision a record instead of a side effect: the tuner
+(:func:`repro.autotune.tune`, ``pick_kv_layout``), the op-layer fallbacks
+(:mod:`repro.kernels.ops`), and the AOT loader all ``record()`` here, and
+``explain()`` renders the log as a human-readable "why did the compiler
+pick this" report::
+
+    from repro import obs
+    print(obs.explain())
+
+Each :class:`Decision` carries the decision *inputs* (kernel, shape, dtype,
+backend, mesh descriptor, KV layout), the chosen params, the predicted
+roofline terms (flops / hbm bytes / grid + loop structure / interconnect
+traffic, from ``repro.autotune.cost.CostEstimate``), the measured time when
+the tuner actually ran the candidate, and the **origin**:
+
+    analytic          ranked by the roofline only, this process
+    measured          compiled + timed, this process
+    cache(analytic)   served from the persistent tuning cache (an
+    cache(measured)     earlier process did the work; suffix = how)
+    default           no tuned entry — the kernel's canonical default params
+    fallback-default  a tuned entry existed but failed to build/compile
+    aot-loaded        an executor rebuilt from the AOT program store
+
+Recording is always on (it happens at *tuning* time, which the op layer
+memoises per process — never on a hot call path) and keyed by the same
+canonical cache key the tuner uses, so one decision per (kernel, shape,
+dtype, backend, mesh, layout) is retained with the latest origin.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from typing import Dict, List, Optional
+
+__all__ = ["Decision", "ProvenanceLog", "log", "record", "decisions",
+           "get", "clear", "explain"]
+
+
+@dataclasses.dataclass(frozen=True)
+class Decision:
+    """One tuned choice, with everything needed to audit it."""
+    kind: str                       # "kernel" | "mesh" | "kv_layout" | ...
+    kernel: str
+    key: str                        # the canonical tuning/executor cache key
+    params: Dict[str, object]
+    origin: str                     # see module docstring
+    shape: Dict[str, object] = dataclasses.field(default_factory=dict)
+    dtype: str = "float32"
+    backend: str = "jnp"
+    mesh: str = "single"
+    layout: str = "dense"
+    cost_s: Optional[float] = None        # predicted roofline seconds
+    terms: Dict[str, float] = dataclasses.field(default_factory=dict)
+    measured_us: Optional[float] = None
+    n_candidates: int = 0
+    note: str = ""
+    t_wall: float = dataclasses.field(default_factory=time.time)
+
+    def to_doc(self) -> dict:
+        d = dataclasses.asdict(self)
+        d["params"] = {k: _plain(v) for k, v in self.params.items()}
+        return d
+
+    def describe(self) -> str:
+        shape_s = ",".join(f"{k}={v}" for k, v in sorted(self.shape.items()))
+        params_s = ", ".join(f"{k}={v}" for k, v in
+                             sorted(self.params.items())) or "(defaults)"
+        lines = [f"[{self.kind}] {self.kernel} {shape_s} dtype={self.dtype} "
+                 f"backend={self.backend} mesh={self.mesh} "
+                 f"layout={self.layout}",
+                 f"    picked {params_s}",
+                 f"    origin {self.origin}"
+                 + (f" over {self.n_candidates} candidates"
+                    if self.n_candidates else "")]
+        why = []
+        if self.cost_s is not None:
+            why.append(f"predicted {self.cost_s:.3g} s")
+        if self.terms:
+            why.append("roofline " + " ".join(
+                f"{k}={v:.3g}" for k, v in sorted(self.terms.items()) if v))
+        if self.measured_us is not None:
+            why.append(f"measured {self.measured_us:.1f} us")
+        if why:
+            lines.append("    " + "; ".join(why))
+        if self.note:
+            lines.append(f"    note: {self.note}")
+        return "\n".join(lines)
+
+
+def _plain(v):
+    return v if isinstance(v, (str, int, float, bool)) or v is None else repr(v)
+
+
+class ProvenanceLog:
+    """Keyed store of the latest Decision per cache key, insert-ordered."""
+
+    def __init__(self):
+        self._decisions: Dict[str, Decision] = {}
+        self._lock = threading.Lock()
+
+    def record(self, d: Decision) -> None:
+        with self._lock:
+            self._decisions[d.key] = d
+
+    def get(self, key: str) -> Optional[Decision]:
+        return self._decisions.get(key)
+
+    def decisions(self, kind: Optional[str] = None) -> List[Decision]:
+        with self._lock:
+            ds = list(self._decisions.values())
+        if kind is not None:
+            ds = [d for d in ds if d.kind == kind]
+        return ds
+
+    def clear(self) -> None:
+        with self._lock:
+            self._decisions.clear()
+
+    def __len__(self) -> int:
+        return len(self._decisions)
+
+    def explain(self, key: Optional[str] = None,
+                kind: Optional[str] = None) -> str:
+        """The human-readable strategy report.
+
+        ``key`` narrows to one decision (substring match on the cache key,
+        so ``explain("matmul")`` works); ``kind`` filters by decision kind.
+        """
+        ds = self.decisions(kind)
+        if key is not None:
+            ds = [d for d in ds if key in d.key]
+        if not ds:
+            return ("strategy provenance — no decisions recorded"
+                    + (f" matching {key!r}" if key else "")
+                    + "\n(run something through repro.kernels.ops / "
+                      "repro.autotune first)")
+        by_origin: Dict[str, int] = {}
+        for d in ds:
+            by_origin[d.origin] = by_origin.get(d.origin, 0) + 1
+        head = (f"strategy provenance — {len(ds)} decision"
+                f"{'s' if len(ds) != 1 else ''} ("
+                + ", ".join(f"{n} {o}" for o, n in sorted(by_origin.items()))
+                + ")")
+        return "\n".join([head] + [d.describe() for d in ds])
+
+
+_log: Optional[ProvenanceLog] = None
+_log_lock = threading.Lock()
+
+
+def log() -> ProvenanceLog:
+    """The process-wide provenance log."""
+    global _log
+    with _log_lock:
+        if _log is None:
+            _log = ProvenanceLog()
+        return _log
+
+
+def record(kind: str, kernel: str, key: str, params: Dict[str, object],
+           origin: str, **kw) -> Decision:
+    """Build + record a Decision in the process log; returns it."""
+    d = Decision(kind=kind, kernel=kernel, key=key,
+                 params=dict(params or {}), origin=origin, **kw)
+    log().record(d)
+    return d
+
+
+def decisions(kind: Optional[str] = None) -> List[Decision]:
+    return log().decisions(kind)
+
+
+def get(key: str) -> Optional[Decision]:
+    return log().get(key)
+
+
+def clear() -> None:
+    log().clear()
+
+
+def explain(key: Optional[str] = None, kind: Optional[str] = None) -> str:
+    return log().explain(key, kind)

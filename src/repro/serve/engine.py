@@ -45,6 +45,7 @@ from __future__ import annotations
 
 import contextlib
 import dataclasses
+import logging
 import os
 from typing import Dict, List, Optional
 
@@ -52,8 +53,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.models.transformer import Model
 from repro.serve.scheduler import Scheduler, pick_bucket, seq_buckets
+
+log = logging.getLogger("repro.serve.engine")
 
 __all__ = ["Request", "BatchedEngine", "ContinuousEngine", "ShardedEngine",
            "sample", "sample_tokens"]
@@ -165,6 +169,10 @@ class _EngineBase:
         self.kv_layout = kv_layout
         self.tuning_cache = tuning_cache
         self.tuned: Dict[str, dict] = {}
+        # recompile detector: (decode compiles, prefill entries) at the last
+        # ``mark_warm()``; None until the engine declares itself warm
+        self._jit_baseline = None
+        self._recompiles_after_warm = 0
         if tuning_cache is not None:
             self._warm(batch_sizes, aot)
         self._prefill = jax.jit(
@@ -245,8 +253,9 @@ class _EngineBase:
         key = (tokens.shape, str(tokens.dtype))
         exe = self._prefill_exes.get(key)
         if exe is None:
-            exe = self._prefill_fresh.lower(self.params, tokens,
-                                            lengths).compile()
+            with obs.span("serve.prefill_compile", shape=str(tokens.shape)):
+                exe = self._prefill_fresh.lower(self.params, tokens,
+                                                lengths).compile()
             self._prefill_exes[key] = exe
         try:
             return exe(self.params, tokens, lengths)
@@ -254,13 +263,17 @@ class _EngineBase:
             # safe only because nothing is donated here; warn so a
             # persistent mismatch (every admission paying jit dispatch)
             # is a diagnosable regression, not an invisible one
+            obs.counter("serve.prefill_fallbacks").inc()
+            obs.event("serve.prefill_fallback",
+                      error=f"{type(e).__name__}: {e}")
             if not self._warned_prefill_fallback:
                 self._warned_prefill_fallback = True
                 import warnings
-                warnings.warn(
-                    f"prefill executable rejected its arguments "
-                    f"({type(e).__name__}: {e}); falling back to jit "
-                    f"dispatch for this engine", RuntimeWarning)
+                msg = (f"prefill executable rejected its arguments "
+                       f"({type(e).__name__}: {e}); falling back to jit "
+                       f"dispatch for this engine")
+                log.warning("%s", msg)
+                warnings.warn(msg, RuntimeWarning)
             return self._prefill_fresh(self.params, tokens, lengths)
 
     def prefill_cache_size(self) -> int:
@@ -279,6 +292,57 @@ class _EngineBase:
         'recompile count' the serving benchmark and tests watch)."""
         return int(self._chunk_fn._cache_size())
 
+    # -- unified stats + recompile detector ----------------------------------
+
+    def stats(self) -> dict:
+        """Every number the engine exposes, in one dict.
+
+        Supersedes poking ``decode_cache_misses()`` / ``prefill_cache_size()``
+        / the executor cache / the scheduler one at a time (those accessors
+        all remain).  Subclasses extend the dict; they never replace keys."""
+        from repro import compiler
+        return {
+            "decode_compiles": self.decode_cache_misses(),
+            "prefill_entries": self.prefill_cache_size(),
+            "recompiles_after_warm": self._recompiles_after_warm,
+            "executor_cache": compiler.executor_cache().stats(),
+        }
+
+    def _jit_sizes(self):
+        return (self.decode_cache_misses(), self.prefill_cache_size())
+
+    def mark_warm(self) -> None:
+        """Declare the jit caches warm: any growth past this point is a
+        *recompile* — flagged by the detector, counted in ``stats()``.
+        ``run`` calls this automatically when its first batch completes."""
+        self._jit_baseline = self._jit_sizes()
+
+    def _check_recompiles(self) -> None:
+        """Compare jit-cache sizes against the warm baseline; flag growth.
+
+        Fires a structured obs event + a ``logging`` warning (NOT
+        ``warnings.warn`` — a recompile is a performance regression, never
+        an error) and advances the baseline so each growth is reported
+        once."""
+        if self._jit_baseline is None:
+            return
+        cur = self._jit_sizes()
+        base = self._jit_baseline
+        grew = sum(max(0, c - b) for c, b in zip(cur, base))
+        if not grew:
+            return
+        self._recompiles_after_warm += grew
+        self._jit_baseline = cur
+        obs.counter("serve.recompiles_after_warm").inc(grew)
+        obs.event("serve.recompile_after_warm",
+                  decode_compiles=cur[0], prefill_entries=cur[1],
+                  baseline_decode=base[0], baseline_prefill=base[1])
+        log.warning(
+            "jit cache grew after warm-up: decode compiles %d -> %d, "
+            "prefill entries %d -> %d (a new shape/bucket reached the "
+            "engine; warm traffic should never recompile)",
+            base[0], cur[0], base[1], cur[1])
+
     # -- autotune + AOT warm-up ----------------------------------------------
 
     def _aot_dir(self, aot) -> Optional[str]:
@@ -294,25 +358,28 @@ class _EngineBase:
         from repro import autotune, compiler
         from repro.kernels import ops
         cfg = self.model.cfg
-        self.tuned = autotune.warm_for_model(
-            cfg, max_seq=self.max_seq, cache=self.tuning_cache,
-            batch_sizes=batch_sizes)
-        aot_dir = self._aot_dir(aot)
-        if aot_dir is None:
-            return
-        store = compiler.executor_cache()
-        store.load_aot(aot_dir)  # a prior engine's programs: skip staging
-        before = set(store.keys())
-        with self._options_scope():
-            for kernel, shape in autotune.model_kernel_shapes(
-                    cfg, max_seq=self.max_seq, batch_sizes=batch_sizes):
-                try:
-                    ops.warm_kernel(kernel, **shape)
-                except (ValueError, AssertionError):
-                    continue  # shape with no valid strategy space
-        # export only the keys THIS engine staged — a shared process cache
-        # must not leak another model's programs into this AOT directory
-        store.save_aot(aot_dir, keys=set(store.keys()) - before)
+        with obs.span("engine.warm", max_seq=self.max_seq,
+                      batch_sizes=str(tuple(batch_sizes))):
+            self.tuned = autotune.warm_for_model(
+                cfg, max_seq=self.max_seq, cache=self.tuning_cache,
+                batch_sizes=batch_sizes)
+            aot_dir = self._aot_dir(aot)
+            if aot_dir is None:
+                return
+            store = compiler.executor_cache()
+            store.load_aot(aot_dir)  # a prior engine's programs: skip staging
+            before = set(store.keys())
+            with self._options_scope():
+                for kernel, shape in autotune.model_kernel_shapes(
+                        cfg, max_seq=self.max_seq, batch_sizes=batch_sizes):
+                    try:
+                        ops.warm_kernel(kernel, **shape)
+                    except (ValueError, AssertionError):
+                        continue  # shape with no valid strategy space
+            # export only the keys THIS engine staged — a shared process
+            # cache must not leak another model's programs into this AOT
+            # directory
+            store.save_aot(aot_dir, keys=set(store.keys()) - before)
 
     def _options_scope(self):
         """The compile-options scope this engine's kernels run under."""
@@ -592,6 +659,10 @@ class ContinuousEngine(_EngineBase):
                     for i, r in enumerate(requests)]
             while not self.sched.idle:
                 self.step_chunk()
+            if self._jit_baseline is None:
+                # first completed batch = warm: later jit-cache growth is a
+                # recompile the detector flags
+                self.mark_warm()
             return [self.take_output(rid) for rid in rids]
 
     def _check_request(self, r: Request) -> None:
@@ -612,19 +683,29 @@ class ContinuousEngine(_EngineBase):
         chunk each, then decode one fused chunk.
 
         Returns the request ids retired at this boundary."""
+        with obs.span("serve.step_chunk"):
+            finished = self._step_chunk_inner()
+        self._check_recompiles()
+        return finished
+
+    def _step_chunk_inner(self) -> List[int]:
         finished: List[int] = []
         self.sched.admissions()               # reserve slots (and KV blocks)
+        if self.pool is not None:
+            obs.gauge("serve.kv_pool.used_blocks").set(self.pool.used_blocks)
+            obs.gauge("serve.kv_pool.free_blocks").set(self.pool.free_blocks)
         for slot, rid in self.sched.prefilling():
             if self._prefill_advance(slot, rid):      # one chunk per boundary
                 if self._finish_admit(slot, rid):
                     finished.append(rid)
         if self.sched.busy_slots():
             self._before_chunk()              # hook: ShardedEngine pins here
-            self.cache, self.tokens, self.pos, self.keys, toks = \
-                self._chunk_fn(self.params, self.cache, self.tokens,
-                               self.pos, self.keys, self.temps, self.top_ks,
-                               self.block_tables)
-            block = np.asarray(toks)          # the chunk's one host sync
+            with obs.span("serve.decode_chunk", chunk=self.chunk):
+                self.cache, self.tokens, self.pos, self.keys, toks = \
+                    self._chunk_fn(self.params, self.cache, self.tokens,
+                                   self.pos, self.keys, self.temps,
+                                   self.top_ks, self.block_tables)
+                block = np.asarray(toks)      # the chunk's one host sync
             slot_of = {s.req_id: i for i, s in enumerate(self.sched.slots)
                        if not s.free}
             retired = self.sched.record_chunk(block)
@@ -640,6 +721,13 @@ class ContinuousEngine(_EngineBase):
         """Hook between boundary admissions and the fused decode chunk —
         :class:`ShardedEngine` re-pins shardings here so admission-time
         host updates can never hand the chunk a new jit signature."""
+
+    def stats(self) -> dict:
+        out = super().stats()
+        out["scheduler"] = self.sched.stats()
+        if self.pool is not None:
+            out["kv_pool"] = self.pool.stats()
+        return out
 
     def _park_lane(self, slot: int) -> None:
         """Neutralise a freed lane: position past max_seq so its decode
@@ -662,6 +750,13 @@ class ContinuousEngine(_EngineBase):
             self._begin_admit(slot)
         take = min(plen - start, self.buckets[-1])
         bucket = pick_bucket(take, self.buckets)
+        with obs.span("serve.prefill_chunk", slot=slot, req_id=rid,
+                      bucket=bucket, start=start):
+            return self._prefill_advance_inner(slot, r, plen, start, take,
+                                               bucket)
+
+    def _prefill_advance_inner(self, slot, r, plen, start, take,
+                               bucket) -> bool:
         tokens = self._pad_prompt(r.prompt[start:start + take], bucket)[None]
         lengths = jnp.asarray([take], jnp.int32)
         if self.kv_layout == "paged":
@@ -677,7 +772,9 @@ class ContinuousEngine(_EngineBase):
             exe_key = (tokens.shape, start == 0)
             exe = self._prefill_exes.get(exe_key)
             if exe is None:
-                exe = fn.lower(*args).compile()
+                with obs.span("serve.prefill_compile",
+                              shape=str(tokens.shape), first=start == 0):
+                    exe = fn.lower(*args).compile()
                 self._prefill_exes[exe_key] = exe
             logits, kv, staging = exe(*args)
             _, slot_state = self.model.split_paged_cache(self.cache)
@@ -863,4 +960,11 @@ class ShardedEngine(ContinuousEngine):
     def step_chunk(self):
         out = super().step_chunk()
         self._pin_slot_state()
+        return out
+
+    def stats(self) -> dict:
+        out = super().stats()
+        out["mesh"] = {"axis": self.mesh_axis,
+                       "shards": int(self.mesh.shape[self.mesh_axis]),
+                       "devices": int(self.mesh.devices.size)}
         return out

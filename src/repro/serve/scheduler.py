@@ -28,8 +28,11 @@ from __future__ import annotations
 import bisect
 import dataclasses
 import functools
+import time
 from collections import deque
 from typing import Deque, Dict, List, Sequence, Tuple
+
+from repro import obs
 
 __all__ = ["seq_buckets", "pick_bucket", "Scheduler"]
 
@@ -112,15 +115,23 @@ class Scheduler:
         self.meta: Dict[int, dict] = {}
         self.outputs: Dict[int, List[int]] = {}
         self.pool = pool  # repro.serve.paged.BlockPool (or None: dense)
+        # lifecycle accounting (``stats()`` / ``Engine.stats()``): admits and
+        # retires are totals; a *deferral* is one chunk boundary at which the
+        # queue head could not be admitted for lack of KV blocks
+        self.n_admits = 0
+        self.n_retires = 0
+        self.n_deferrals = 0
 
     # -- intake --------------------------------------------------------------
 
     def submit(self, req_id: int, prompt_len: int, max_new: int) -> None:
         if req_id in self.meta:
             raise ValueError(f"request id {req_id} already submitted")
-        self.meta[req_id] = {"prompt_len": prompt_len, "max_new": max_new}
+        self.meta[req_id] = {"prompt_len": prompt_len, "max_new": max_new,
+                             "t_submit": time.perf_counter()}
         self.outputs[req_id] = []
         self.pending.append(req_id)
+        obs.counter("serve.requests_submitted").inc()
 
     # -- chunk-boundary decisions -------------------------------------------
 
@@ -132,6 +143,7 @@ class Scheduler:
         queue does not fit, admission stops — later requests never jump
         ahead of it."""
         out = []
+        now = time.perf_counter()
         for i, slot in enumerate(self.slots):
             if not self.pending:
                 break
@@ -143,6 +155,13 @@ class Scheduler:
                 need = self.pool.blocks_for(
                     meta["prompt_len"] + meta["max_new"])
                 if not self.pool.can_alloc(need):
+                    # the queue head is block-starved: one deferral per
+                    # boundary, however many slots were still free behind it
+                    self.n_deferrals += 1
+                    obs.counter("serve.admission_deferrals").inc()
+                    obs.event("serve.admission_deferred", req_id=rid,
+                              need_blocks=need,
+                              free_blocks=self.pool.free_blocks)
                     break
                 self.pool.alloc(i, need)
             self.pending.popleft()
@@ -150,6 +169,13 @@ class Scheduler:
             slot.remaining = meta["max_new"]
             slot.prefill_pos = 0
             slot.prefill_len = meta["prompt_len"]
+            self.n_admits += 1
+            meta["t_admit"] = now
+            obs.counter("serve.requests_admitted").inc()
+            obs.histogram("serve.queue_wait_s").observe(
+                now - meta["t_submit"])
+            obs.event("serve.admit", req_id=rid, slot=i,
+                      prompt_len=meta["prompt_len"])
             out.append((i, rid))
         return out
 
@@ -173,6 +199,11 @@ class Scheduler:
         ``prefill_advance`` at all."""
         slot = self.slots[slot_idx]
         slot.prefill_pos = slot.prefill_len
+        meta = self.meta.get(slot.req_id)
+        if meta is not None and "t_first" not in meta:
+            meta["t_first"] = time.perf_counter()
+            obs.histogram("serve.ttft_s").observe(
+                meta["t_first"] - meta["t_submit"])
         if slot.remaining > 0:
             self.outputs[slot.req_id].append(int(token))
             slot.remaining -= 1
@@ -201,6 +232,22 @@ class Scheduler:
 
     def _retire(self, slot_idx: int) -> None:
         slot = self.slots[slot_idx]
+        rid = slot.req_id
+        meta = self.meta.get(rid)
+        self.n_retires += 1
+        obs.counter("serve.requests_retired").inc()
+        if meta is not None:
+            now = time.perf_counter()
+            n_tok = len(self.outputs.get(rid, ()))
+            obs.histogram("serve.request_tokens").observe(n_tok)
+            obs.histogram("serve.e2e_s").observe(now - meta["t_submit"])
+            t_first = meta.get("t_first")
+            # decode throughput: tokens after the first, over the time after
+            # the first — prefill latency is TTFT's burden, not decode's
+            if t_first is not None and n_tok > 1 and now > t_first:
+                obs.histogram("serve.decode_tok_s").observe(
+                    (n_tok - 1) / (now - t_first))
+        obs.event("serve.retire", req_id=rid, slot=slot_idx)
         slot.req_id = -1
         slot.remaining = 0
         slot.prefill_pos = slot.prefill_len = 0
@@ -221,6 +268,18 @@ class Scheduler:
         """Slots actively DECODING (admitted and fully prefilled)."""
         return [i for i, s in enumerate(self.slots)
                 if not s.free and not s.prefilling]
+
+    def stats(self) -> Dict[str, int]:
+        """Lifecycle totals + instantaneous occupancy (one dict, cheap)."""
+        return {
+            "admits": self.n_admits,
+            "retires": self.n_retires,
+            "deferrals": self.n_deferrals,
+            "pending": len(self.pending),
+            "busy": sum(1 for s in self.slots if not s.free),
+            "prefilling": sum(1 for s in self.slots if s.prefilling),
+            "slots": len(self.slots),
+        }
 
     @property
     def idle(self) -> bool:
