@@ -9,11 +9,18 @@ Checks (stdlib only, no jsonschema dependency):
   * a metrics file is a ``{name: snapshot}`` dict whose every snapshot has
     a known ``type`` with that type's required fields;
   * a BENCH_serve.json carries its embedded ``metrics`` snapshot with the
-    benchmark's reported gauges present.
+    benchmark's reported gauges present;
+  * a strategy-trace artefact (``--strategy``) carries well-formed
+    serialised ``repro.strategy.StrategyTrace`` docs — version 1, every
+    step with a non-empty string ``rule``, a ``path`` of slot-name strings
+    and JSON-scalar ``params``.  Accepts a bare trace doc, a tuning-cache
+    file (every record's ``strategy_trace``), or any JSON object whose
+    (nested) ``strategy_trace`` fields are then checked.
 
 Usage:
   python benchmarks/validate_trace.py --trace trace.json \
-      [--metrics metrics.json] [--bench BENCH_serve.json]
+      [--metrics metrics.json] [--bench BENCH_serve.json] \
+      [--strategy tuning_cache.json]
 
 Exits non-zero with a message naming the first offending record, so a CI
 failure points at the event, not just the file.
@@ -96,14 +103,79 @@ def validate_bench(path: str) -> int:
     return n
 
 
+_TRACE_VERSION = 1  # repro.strategy.lang.TRACE_VERSION (stdlib-only here)
+
+
+def validate_strategy_trace_doc(doc, where: str) -> int:
+    if not isinstance(doc, dict):
+        fail(f"{where}: strategy trace is not an object")
+    if doc.get("version") != _TRACE_VERSION:
+        fail(f"{where}: unsupported strategy-trace version "
+             f"{doc.get('version')!r}")
+    steps = doc.get("steps")
+    if not isinstance(steps, list):
+        fail(f"{where}: 'steps' must be a list")
+    for i, s in enumerate(steps):
+        w = f"{where}.steps[{i}]"
+        if not isinstance(s, dict):
+            fail(f"{w}: not an object")
+        if not isinstance(s.get("rule"), str) or not s["rule"]:
+            fail(f"{w}: missing/empty 'rule'")
+        path = s.get("path", [])
+        if not isinstance(path, list) or \
+                not all(isinstance(p, str) and p for p in path):
+            fail(f"{w} ({s['rule']!r}): 'path' must be a list of slot names")
+        params = s.get("params", {})
+        if not isinstance(params, dict):
+            fail(f"{w} ({s['rule']!r}): 'params' must be an object")
+        for k, v in params.items():
+            if not isinstance(v, (str, int, float, bool)) and v is not None:
+                fail(f"{w} ({s['rule']!r}): param {k!r} is not a JSON "
+                     f"scalar: {type(v).__name__}")
+    return len(steps)
+
+
+def _find_strategy_traces(doc, where: str):
+    """Yield (trace_doc, where) for every strategy trace in an artefact."""
+    if isinstance(doc, dict):
+        if "steps" in doc and "version" in doc:
+            yield doc, where
+            return
+        for k, v in doc.items():
+            if k == "strategy_trace" and v is not None:
+                yield v, f"{where}.strategy_trace"
+            elif isinstance(v, (dict, list)):
+                yield from _find_strategy_traces(v, f"{where}.{k}")
+    elif isinstance(doc, list):
+        for i, v in enumerate(doc):
+            if isinstance(v, (dict, list)):
+                yield from _find_strategy_traces(v, f"{where}[{i}]")
+
+
+def validate_strategy(path: str) -> int:
+    with open(path) as f:
+        doc = json.load(f)
+    found = list(_find_strategy_traces(doc, path))
+    n = 0
+    for trace, where in found:
+        validate_strategy_trace_doc(trace, where)
+        n += 1
+    if n == 0:
+        fail(f"{path}: no strategy traces found (neither a trace doc nor "
+             f"any 'strategy_trace' field)")
+    return n
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--trace", default=None)
     ap.add_argument("--metrics", default=None)
     ap.add_argument("--bench", default=None)
+    ap.add_argument("--strategy", default=None)
     args = ap.parse_args()
-    if not (args.trace or args.metrics or args.bench):
-        fail("nothing to validate: pass --trace/--metrics/--bench")
+    if not (args.trace or args.metrics or args.bench or args.strategy):
+        fail("nothing to validate: pass --trace/--metrics/--bench/"
+             "--strategy")
     if args.trace:
         n = validate_trace(args.trace)
         print(f"validate_trace: {args.trace}: {n} events OK")
@@ -115,6 +187,10 @@ def main() -> None:
         n = validate_bench(args.bench)
         print(f"validate_trace: {args.bench}: embedded metrics "
               f"({n}) OK")
+    if args.strategy:
+        n = validate_strategy(args.strategy)
+        print(f"validate_trace: {args.strategy}: {n} strategy trace"
+              f"{'s' if n != 1 else ''} OK")
 
 
 if __name__ == "__main__":

@@ -47,6 +47,7 @@ class TuneResult:
     measured_us: Optional[float] = None
     timings: Dict[str, float] = field(default_factory=dict)
     n_candidates: int = 0
+    strategy_trace: Optional[dict] = None  # the winner's derivation
 
     def params_key(self) -> str:
         return space_mod.params_key(self.params)
@@ -79,18 +80,54 @@ def _record_decision(kernel: str, key: str, params: Dict[str, object],
                      origin: str, *, backend: str, dtype: str, mesh: str,
                      layout: str, shape: Dict[str, object],
                      cost_s=None, terms=None, measured_us=None,
-                     n_candidates: int = 0, note: str = "") -> None:
+                     n_candidates: int = 0, note: str = "",
+                     strategy_trace: Optional[dict] = None) -> None:
     obs.record(_decision_kind(kernel, backend), kernel, key, params, origin,
                shape=dict(shape), dtype=dtype, backend=backend, mesh=mesh,
                layout=layout, cost_s=cost_s, terms=dict(terms or {}),
-               measured_us=measured_us, n_candidates=n_candidates, note=note)
+               measured_us=measured_us, n_candidates=n_candidates, note=note,
+               strategy_trace=strategy_trace)
+
+
+def _trace_doc_of(cand) -> Optional[dict]:
+    """A candidate's serialised derivation; never lets trace extraction
+    break tuning."""
+    try:
+        return cand.trace_doc()
+    except Exception:
+        return None
+
+
+def _seed_candidates(cache: TuningCache, kernel: str, ranked,
+                     limit: int = 2) -> list:
+    """Candidates whose derivation matches a mined abstraction stored
+    beside the cache — measured first, before the analytic top-k."""
+    from repro.strategy import mine as mine_mod
+    try:
+        abstractions = mine_mod.load_abstractions(
+            mine_mod.abstractions_path(cache.path))
+    except Exception:
+        return []
+    if not abstractions:
+        return []
+    seeds = []
+    for cand, _ in ranked:
+        doc = _trace_doc_of(cand)
+        if doc and any(mine_mod.matches(a, doc) for a in abstractions):
+            seeds.append(cand)
+            if len(seeds) >= limit:
+                break
+    if seeds:
+        obs.event("autotune.seeded", kernel=kernel, n=len(seeds),
+                  abstractions=len(abstractions))
+    return seeds
 
 
 def tune(spec: Spec, *, backend: str = "jnp", dtype: str = "float32",
          mesh=None, layout: str = "dense", cache=None, measure: bool = True,
          top_k: int = 4, iters: int = 5, force: bool = False,
          verify: bool = False, arg_vars: Optional[List[P.Var]] = None,
-         **shape) -> TuneResult:
+         strategies=None, **shape) -> TuneResult:
     """Pick the best strategy for ``spec`` at a concrete shape.
 
     ``spec`` is a kernel name ("dot", "asum", "scal", "matmul", "rmsnorm",
@@ -118,6 +155,15 @@ def tune(spec: Spec, *, backend: str = "jnp", dtype: str = "float32",
     ``measure=False`` ranks analytically only (no compilation — cheap
     enough for inline use on a serving path).  ``verify=True`` additionally
     checks every measured candidate's output against the default strategy.
+
+    ``strategies`` (a list of ``repro.strategy.Strategy`` programs)
+    replaces the enumerated space with explicit candidates: each program is
+    applied to the kernel's naive spec (or to an expression spec), the
+    identity always rides along, and the winner's params are
+    ``{"strategy": name}`` — its derivation replays from the recorded
+    ``strategy_trace``.  Every fresh tuning decision (with or without
+    explicit strategies) serialises the winner's ``StrategyTrace`` into the
+    cache record and the provenance log.
     """
     from repro import mesh as mesh_mod
     c = _resolve_cache(cache)
@@ -178,17 +224,27 @@ def tune(spec: Spec, *, backend: str = "jnp", dtype: str = "float32",
                 cost_s=cached.get("cost_s"),
                 terms=cached.get("roofline"),
                 measured_us=cached.get("measured_us"),
-                n_candidates=int(cached.get("n_candidates", 0)))
+                n_candidates=int(cached.get("n_candidates", 0)),
+                strategy_trace=cached.get("strategy_trace"))
             return TuneResult(
                 kernel=kernel, key=key, params=dict(cached["params"]),
                 source="cache", cost_s=cached.get("cost_s"),
                 measured_us=cached.get("measured_us"),
                 timings=dict(cached.get("timings", {})),
-                n_candidates=int(cached.get("n_candidates", 0)))
+                n_candidates=int(cached.get("n_candidates", 0)),
+                strategy_trace=cached.get("strategy_trace"))
 
     with obs.span("autotune.enumerate", kernel=kernel, backend=backend,
                   mesh=mesh_desc):
-        if isinstance(spec, str):
+        if strategies is not None:
+            if isinstance(spec, str):
+                cands = space_mod.strategy_candidates(kernel, strategies,
+                                                      **shape)
+            else:
+                cands = space_mod.strategy_candidates(
+                    kernel, strategies, expr=spec, arg_vars=arg_vars)
+            default = cands[0] if cands else None  # the identity program
+        elif isinstance(spec, str):
             if backend == "shardmap":
                 # mesh-placement space, enumerated from the descriptor alone
                 axes = mesh_mod.parse_descriptor(mesh_desc)
@@ -226,6 +282,11 @@ def tune(spec: Spec, *, backend: str = "jnp", dtype: str = "float32",
 
     if measure:
         pick = [cand for cand, _ in ranked[:max(1, top_k)]]
+        # mined abstractions (strategy mining over this cache's corpus)
+        # seed the measured set: matching derivations race first
+        seeds = _seed_candidates(c, kernel, ranked)
+        pick = seeds + [p for p in pick
+                        if all(p.params != s.params for s in seeds)]
         if default is not None and all(p.params != default.params
                                        for p in pick):
             pick.append(default)
@@ -245,24 +306,25 @@ def tune(spec: Spec, *, backend: str = "jnp", dtype: str = "float32",
             source = "measured"
 
     terms = _roofline_terms(chosen)
+    trace_doc = _trace_doc_of(chosen)
     record = {
         "kernel": kernel, "params": chosen.params_dict, "source": source,
         "cost_s": chosen_cost if chosen_cost != float("inf") else None,
         "measured_us": measured_us, "timings": timings,
         "shape": dict(shape), "backend": backend, "dtype": dtype,
         "mesh": mesh_desc, "n_candidates": len(cands),
-        "roofline": terms,
+        "roofline": terms, "strategy_trace": trace_doc,
     }
     c.put(key, record)
     _record_decision(kernel, key, chosen.params_dict, source,
                      backend=backend, dtype=dtype, mesh=mesh_desc,
                      layout=layout, shape=shape, cost_s=record["cost_s"],
                      terms=terms, measured_us=measured_us,
-                     n_candidates=len(cands))
+                     n_candidates=len(cands), strategy_trace=trace_doc)
     return TuneResult(kernel=kernel, key=key, params=chosen.params_dict,
                       source=source, cost_s=record["cost_s"],
                       measured_us=measured_us, timings=timings,
-                      n_candidates=len(cands))
+                      n_candidates=len(cands), strategy_trace=trace_doc)
 
 
 def get_tuned(kernel: str, *, backend: str = "jnp", dtype: str = "float32",

@@ -9,6 +9,13 @@ by a small JSON-able ``params`` dict so tuning decisions survive in the
 persistent cache (see cache.py) and can be rebuilt later with
 ``candidate_from_params``.
 
+Since the ``repro.strategy`` subsystem landed, each params dict denotes a
+strategy *program* (``repro.strategy.spaces.program_for``) applied to the
+kernel's naive spec, and every candidate can report the derivation it took
+(:meth:`Candidate.trace_doc`) — the legacy hand-built builders survive as
+``legacy_candidate``, the oracle the strategy-program path is equality-
+tested against.
+
 Parameter vocabulary per kernel family:
 
   dot / reduce   {"block": int|None, "leaf": "vpu"|"seq"}
@@ -43,10 +50,17 @@ LANE_WIDTHS: Tuple[int, ...] = (128,)
 
 @dataclass(frozen=True)
 class Candidate:
-    """One point of the strategy space: params + a builder for its expr."""
+    """One point of the strategy space: params + a builder for its expr.
+
+    ``strategy``/``spec`` (a ``repro.strategy`` program + the naive-spec
+    builder it applies to) are present on strategy-derived candidates and
+    power :meth:`trace_doc`; builder-only candidates (legacy oracles,
+    hand-edited params) simply have no derivation to report."""
     kernel: str
     params: Tuple[Tuple[str, object], ...]
     build: Builder = field(compare=False, repr=False)
+    strategy: object = field(default=None, compare=False, repr=False)
+    spec: object = field(default=None, compare=False, repr=False)
 
     @property
     def params_dict(self) -> Dict[str, object]:
@@ -55,12 +69,27 @@ class Candidate:
     def params_key(self) -> str:
         return params_key(self.params_dict)
 
+    def trace_doc(self) -> Optional[dict]:
+        """The serialised StrategyTrace of this candidate's derivation, or
+        None when the candidate was not built by a strategy program."""
+        if self.strategy is None or self.spec is None:
+            return None
+        expr, _ = self.spec()
+        res = self.strategy.apply(expr)
+        return res.trace.to_doc() if res.ok else None
+
     def program(self):
         """This candidate as a ``repro.compiler.Program`` — the staged entry
         the tuner's measure/compile paths consume."""
         from repro.compiler import Program
         expr, arg_vars = self.build()
-        return Program(expr, arg_vars, name=f"{self.kernel}[{self.params_key()}]")
+        prog = Program(expr, arg_vars,
+                       name=f"{self.kernel}[{self.params_key()}]")
+        try:
+            prog.strategy_trace = self.trace_doc()
+        except Exception:
+            prog.strategy_trace = None
+        return prog
 
 
 def params_key(params: Dict[str, object]) -> str:
@@ -72,17 +101,41 @@ def _cand(kernel: str, params: Dict[str, object], build: Builder) -> Candidate:
     return Candidate(kernel, tuple(sorted(params.items())), build)
 
 
+def _strategy_cand(kernel: str, params: Dict[str, object],
+                   shape: Dict[str, object]) -> Candidate:
+    """A candidate whose expr is derived by the strategy program its params
+    denote, applied to the kernel's naive spec."""
+    from repro import strategy as strategy_mod
+    spec = strategy_mod.spec_builder(kernel, **shape)
+    program = strategy_mod.program_for(kernel, params)
+
+    def build():
+        expr, argv = spec()
+        res = program.apply(expr)
+        if not res.ok:
+            raise ValueError(
+                f"strategy program for {kernel} {params_key(params)} "
+                f"failed: {res.reason}")
+        return res.phrase, argv
+
+    return Candidate(kernel, tuple(sorted(params.items())), build,
+                     strategy=program, spec=spec)
+
+
 def _divides(blocks: Iterable[int], n: int) -> List[int]:
     return [b for b in blocks if 0 < b <= n and n % b == 0]
 
 
 # ---------------------------------------------------------------------------
-# per-kernel spaces
+# per-kernel spaces (params grids; every candidate built by its strategy
+# program via _strategy_cand)
 # ---------------------------------------------------------------------------
 
 def _reduce_builder(kernel: str, n: int, block: Optional[int],
                     leaf: str) -> Builder:
-    """Shared builder for the reduce-shaped kernels (dot, asum)."""
+    """Legacy hand-built builder for the reduce-shaped kernels (dot, asum) —
+    kept as the oracle ``legacy_candidate`` exposes; enumeration goes
+    through the strategy programs."""
     def build():
         from repro.kernels import dpia_blas
         naive = getattr(dpia_blas, f"naive_{kernel}")
@@ -103,12 +156,12 @@ def _reduce_builder(kernel: str, n: int, block: Optional[int],
 
 def _reduce_space(kernel: str, n: int,
                   blocks: Sequence[int]) -> List[Candidate]:
-    out = [_cand(kernel, {"block": None, "leaf": "seq"},
-                 _reduce_builder(kernel, n, None, "seq"))]
+    shape = {"n": n}
+    out = [_strategy_cand(kernel, {"block": None, "leaf": "seq"}, shape)]
     for b in _divides(tuple(blocks) + (n,), n):
         for leaf in ("vpu", "seq"):
-            out.append(_cand(kernel, {"block": b, "leaf": leaf},
-                             _reduce_builder(kernel, n, b, leaf)))
+            out.append(_strategy_cand(kernel, {"block": b, "leaf": leaf},
+                                      shape))
     return _dedup(out)
 
 
@@ -122,6 +175,7 @@ def asum_space(n: int, blocks: Sequence[int] = SPLIT_BLOCKS) -> List[Candidate]:
 
 def _scal_builder(n: int, block: Optional[int],
                   vector: Optional[int]) -> Builder:
+    """Legacy hand-built scal builder (oracle for the strategy programs)."""
     from repro.kernels import dpia_blas
 
     def build():
@@ -145,49 +199,76 @@ def _scal_builder(n: int, block: Optional[int],
 
 def scal_space(n: int, blocks: Sequence[int] = SPLIT_BLOCKS,
                lanes: Sequence[int] = LANE_WIDTHS) -> List[Candidate]:
-    out = [_cand("scal", {"block": None, "vector": None},
-                 _scal_builder(n, None, None))]
+    shape = {"n": n}
+    out = [_strategy_cand("scal", {"block": None, "vector": None}, shape)]
     for b in _divides(tuple(blocks) + (n,), n):
-        out.append(_cand("scal", {"block": b, "vector": None},
-                         _scal_builder(n, b, None)))
+        out.append(_strategy_cand("scal", {"block": b, "vector": None},
+                                  shape))
         for w in lanes:
             if b % w == 0:
-                out.append(_cand("scal", {"block": b, "vector": w},
-                                 _scal_builder(n, b, w)))
+                out.append(_strategy_cand("scal",
+                                          {"block": b, "vector": w}, shape))
     return _dedup(out)
 
 
 def matmul_space(m: int, k: int, n: int,
                  tiles: Sequence[int] = MXU_TILES) -> List[Candidate]:
-    from repro.kernels import dpia_blas
+    shape = {"m": m, "k": k, "n": n}
     out = []
     bms = _divides(tuple(tiles) + (min(128, m),), m)
     bks = _divides(tuple(tiles) + (min(128, k),), k)
     for bm in bms:
         for bk in bks:
-            out.append(_cand(
-                "matmul", {"bm": bm, "bk": bk},
-                (lambda bm=bm, bk=bk:
-                 dpia_blas.strategy_matmul(m, k, n, bm=bm, bk=bk))))
+            out.append(_strategy_cand("matmul", {"bm": bm, "bk": bk}, shape))
     return _dedup(out)
 
 
 def rmsnorm_space(rows: int, d: int, eps: float = 1e-6,
                   row_blocks: Sequence[int] = ROW_BLOCKS) -> List[Candidate]:
-    from repro.kernels import dpia_blas
+    shape = {"rows": rows, "d": d, "eps": eps}
     return _dedup([
-        _cand("rmsnorm", {"row_block": rb},
-              (lambda rb=rb: dpia_blas.strategy_rmsnorm(rows, d, eps, rb)))
+        _strategy_cand("rmsnorm", {"row_block": rb}, shape)
         for rb in _divides(tuple(row_blocks) + (rows,), rows)])
 
 
 def softmax_space(rows: int, d: int,
                   row_blocks: Sequence[int] = ROW_BLOCKS) -> List[Candidate]:
-    from repro.kernels import dpia_blas
+    shape = {"rows": rows, "d": d}
     return _dedup([
-        _cand("softmax", {"row_block": rb},
-              (lambda rb=rb: dpia_blas.strategy_softmax(rows, d, rb)))
+        _strategy_cand("softmax", {"row_block": rb}, shape)
         for rb in _divides(tuple(row_blocks) + (rows,), rows)])
+
+
+def legacy_candidate(kernel: str, params: Dict[str, object],
+                     **shape) -> Candidate:
+    """The pre-strategy-language hand-built candidate for a params dict —
+    the oracle ``tests/test_strategy.py`` pins the strategy programs
+    against (phrase-identical by structural fingerprint)."""
+    from repro.kernels import dpia_blas
+    if kernel in ("dot", "asum"):
+        return _cand(kernel, params, _reduce_builder(
+            kernel, shape["n"], params.get("block"),
+            params.get("leaf", "vpu")))
+    if kernel == "scal":
+        return _cand(kernel, params, _scal_builder(
+            shape["n"], params.get("block"), params.get("vector")))
+    if kernel == "matmul":
+        m, k, n = shape["m"], shape["k"], shape["n"]
+        bm, bk = int(params["bm"]), int(params["bk"])
+        return _cand(kernel, params,
+                     lambda: dpia_blas.strategy_matmul(m, k, n, bm=bm, bk=bk))
+    if kernel == "rmsnorm":
+        rows, d = shape["rows"], shape["d"]
+        eps = shape.get("eps", 1e-6)
+        rb = int(params["row_block"])
+        return _cand(kernel, params,
+                     lambda: dpia_blas.strategy_rmsnorm(rows, d, eps, rb))
+    if kernel == "softmax":
+        rows, d = shape["rows"], shape["d"]
+        rb = int(params["row_block"])
+        return _cand(kernel, params,
+                     lambda: dpia_blas.strategy_softmax(rows, d, rb))
+    raise ValueError(f"legacy_candidate: unknown kernel {kernel!r}")
 
 
 def _dedup(cands: List[Candidate]) -> List[Candidate]:
@@ -257,8 +338,64 @@ def candidate_from_params(kernel: str, params: Dict[str, object],
     if kernel == "scal":
         return _cand(kernel, params, _scal_builder(
             shape["n"], params.get("block"), params.get("vector")))
+    if kernel in ("matmul", "rmsnorm", "softmax"):
+        # the strategy programs are shape-independent: side conditions are
+        # checked at apply time, so off-menu (hand-edited) params still build
+        return _strategy_cand(kernel, dict(params), dict(shape))
     raise ValueError(
         f"candidate_from_params: {kernel} has no candidate {params!r}")
+
+
+def strategy_candidates(kernel: str, strategies, *,
+                        expr: Optional[Expr] = None,
+                        arg_vars: Optional[List[P.Var]] = None,
+                        **shape) -> List[Candidate]:
+    """Candidates from explicit ``repro.strategy`` programs (tune's
+    ``strategies=`` path).
+
+    Each program is applied to the kernel's naive spec (or to ``expr`` when
+    given); programs that fail on the term are dropped.  The identity is
+    prepended so the spec itself is always in the race.  Params are
+    ``{"strategy": name}`` — such tuned records replay via their recorded
+    ``strategy_trace`` rather than through ``candidate_from_params``."""
+    from repro import strategy as strategy_mod
+    if expr is not None:
+        if arg_vars is None:
+            raise ValueError("strategy_candidates: arg_vars required with "
+                             "an explicit expr")
+        spec = lambda: (expr, arg_vars)  # noqa: E731
+    else:
+        spec = strategy_mod.spec_builder(kernel, **shape)
+    progs = [("id", strategy_mod.id_())]
+    for i, s in enumerate(strategies):
+        if not isinstance(s, strategy_mod.Strategy):
+            raise TypeError(f"strategy_candidates: candidate {i} is not a "
+                            f"Strategy: {type(s).__name__}")
+        progs.append((s.name, s))
+    out, seen = [], set()
+    for name, prog in progs:
+        e0, argv = spec()
+        res = prog.apply(e0)
+        if not res.ok:
+            continue
+        from repro.strategy import traverse as traverse_mod
+        fp = traverse_mod.fingerprint(res.phrase)
+        if fp in seen:
+            continue
+        seen.add(fp)
+        out.append(Candidate(
+            kernel, (("strategy", name),),
+            (lambda prog=prog: _apply_or_raise(prog, spec)),
+            strategy=prog, spec=spec))
+    return out
+
+
+def _apply_or_raise(prog, spec):
+    e0, argv = spec()
+    res = prog.apply(e0)
+    if not res.ok:
+        raise ValueError(f"strategy {prog.name} failed: {res.reason}")
+    return res.phrase, argv
 
 
 # ---------------------------------------------------------------------------

@@ -229,6 +229,7 @@ class ExecutorCache:
                            {"params": parts[6] if len(parts) > 6 else "?"},
                            "aot-loaded", shape=dict(prog.shape),
                            backend=doc["backend"],
+                           strategy_trace=prog.strategy_trace,
                            note=f"program {prog.name!r} rebuilt from "
                                 f"{directory}")
                 loaded += 1

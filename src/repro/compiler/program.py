@@ -10,10 +10,13 @@ exposes the paper's pipeline as explicit stages:
                .lower()         # strategy rewrites + Stage I -> II
                .compile("pallas")   # Stage III via the backend registry
 
-``lower`` optionally takes a *strategy*: a rewrite callable
-(``expr -> expr``), a tuned-params dict (the ``repro.autotune`` vocabulary,
-for named kernels), or the string ``"autotune"`` to resolve params through
-the tuner's cost model + persistent cache.  ``compile`` resolves its backend
+``lower`` optionally takes a *strategy*: a ``repro.strategy.Strategy``
+program (combinator language over the rewrites — the application's trace is
+kept on ``Program.strategy_trace``), a serialised trace doc (deterministic
+replay of an earlier derivation), a rewrite callable (``expr -> expr``), a
+tuned-params dict (the ``repro.autotune`` vocabulary, for named kernels),
+or the string ``"autotune"`` to resolve params through the tuner's cost
+model + persistent cache.  ``compile`` resolves its backend
 through :mod:`repro.compiler.backends` and threads
 :class:`~repro.compiler.options.CompileOptions` explicitly — no globals.
 
@@ -80,6 +83,7 @@ class Program:
         self.kernel = kernel
         self.shape: Dict[str, int] = dict(shape or {})
         self.name = name or kernel or "program"
+        self.strategy_trace: Optional[dict] = None  # how the term was derived
         self._cmd: Optional[P.Phrase] = None
         self._out: Optional[P.Var] = None
         self._checked = False
@@ -104,7 +108,12 @@ class Program:
             params = space_mod.default_params(kernel, **shape)
         cand = space_mod.candidate_from_params(kernel, dict(params), **shape)
         expr, arg_vars = cand.build()
-        return cls(expr, arg_vars, kernel=kernel, shape=shape, name=kernel)
+        prog = cls(expr, arg_vars, kernel=kernel, shape=shape, name=kernel)
+        try:
+            prog.strategy_trace = cand.trace_doc()
+        except Exception:
+            prog.strategy_trace = None
+        return prog
 
     @classmethod
     def from_imperative(cls, cmd: P.Phrase, arg_vars: Sequence[P.Var],
@@ -159,6 +168,11 @@ class Program:
 
         strategy:
           None            — the term already *is* the strategy (default);
+          Strategy        — a ``repro.strategy`` program; applied to the
+                            term, failure raises, the trace is recorded on
+                            the result's ``strategy_trace``;
+          trace doc       — a serialised ``StrategyTrace`` (dict with
+                            "steps"); deterministic replay of a derivation;
           callable        — a rewrite ``expr -> expr`` (semantics-preserving
                             by the caller's obligation; re-check after);
           params dict     — a point of this kernel's strategy space
@@ -174,6 +188,27 @@ class Program:
         if self.expr is None:
             raise ValueError("lower(strategy): an imperative-only Program "
                              "has no functional term to rewrite")
+        from repro import strategy as strategy_mod
+        if isinstance(strategy, strategy_mod.Strategy):
+            res = strategy.apply(self.expr)
+            if not res.ok:
+                raise ValueError(f"lower(strategy): strategy program failed "
+                                 f"on {self.name!r}: {res.reason}")
+            prog = Program(res.phrase, self.arg_vars, name=self.name,
+                           kernel=self.kernel, shape=self.shape)
+            prog.strategy_trace = res.trace.to_doc()
+            prog._translated()
+            return prog
+        if isinstance(strategy, dict) and strategy_mod.is_trace_doc(strategy):
+            res = strategy_mod.replay(strategy, self.expr)
+            if not res.ok:
+                raise ValueError(f"lower(trace): replay failed on "
+                                 f"{self.name!r}: {res.reason}")
+            prog = Program(res.phrase, self.arg_vars, name=self.name,
+                           kernel=self.kernel, shape=self.shape)
+            prog.strategy_trace = res.trace.to_doc()
+            prog._translated()
+            return prog
         if callable(strategy):
             expr2 = strategy(self.expr)
             prog = Program(expr2, self.arg_vars, name=self.name,
@@ -267,6 +302,7 @@ class Program:
             "args": [serialize.var_to_doc(v) for v in self.arg_vars],
             "out": serialize.var_to_doc(out),
             "checked": bool(self._checked),
+            "strategy_trace": self.strategy_trace,
             "cmd": serialize.phrase_to_doc(cmd),
         }
 
@@ -289,6 +325,7 @@ class Program:
         prog._cmd = serialize.phrase_from_doc(doc["cmd"])
         prog._out = serialize.var_from_doc(doc["out"])
         prog._checked = bool(doc.get("checked"))
+        prog.strategy_trace = doc.get("strategy_trace")
         return prog
 
     def export(self, path: str) -> str:

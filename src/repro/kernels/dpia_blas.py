@@ -117,19 +117,31 @@ def strategy_gemv(m: int, n: int, row_block: int = 128
     return e, [a, x]
 
 
+def rmsnorm_row(d: int, eps: float, w: P.Var):
+    """The per-row rmsnorm body both builders share: mean(x^2) -> rsqrt ->
+    scale (whole-row VPU sum leaf)."""
+    def per_row(row):
+        ss = P.FullReduce("add", P.mul(row, row))
+        inv = P.UnOp("rsqrt", P.add(P.div(ss, P.lit(float(d))), P.lit(eps)))
+        return P.mul(P.mul(row, inv), w)
+    return per_row
+
+
+def naive_rmsnorm(rows: int, d: int, eps: float = 1e-6
+                  ) -> Tuple[Expr, List[P.Var]]:
+    """Row-wise rmsnorm spec: one map over rows, no blocking decided yet."""
+    xs = P.var_exp("xs", Arr(rows, Arr(d, Num())))
+    w = P.var_exp("w", Arr(d, Num()))
+    return P.Map(rmsnorm_row(d, eps, w), xs), [xs, w]
+
+
 def strategy_rmsnorm(rows: int, d: int, eps: float = 1e-6,
                      row_block: int = 8) -> Tuple[Expr, List[P.Var]]:
     """Fused rmsnorm through DPIA: per row-block, mean(x^2) -> rsqrt -> scale."""
     xs = P.var_exp("xs", Arr(rows, Arr(d, Num())))
     w = P.var_exp("w", Arr(d, Num()))
-
-    def per_row(row):
-        ss = P.FullReduce("add", P.mul(row, row))
-        inv = P.UnOp("rsqrt", P.add(P.div(ss, P.lit(float(d))), P.lit(eps)))
-        return P.mul(P.mul(row, inv), w)
-
     e = P.Join(P.Map(
-        lambda blk: P.Map(per_row, blk, level=P.SEQ),
+        lambda blk: P.Map(rmsnorm_row(d, eps, w), blk, level=P.SEQ),
         P.Split(row_block, xs), level=P.GRID(0)))
     return e, [xs, w]
 
@@ -158,25 +170,28 @@ def strategy_softmax(rows: int, d: int, row_block: int = 8
     return e, [xs]
 
 
+def naive_matmul(m: int, k: int, n: int) -> Tuple[Expr, List[P.Var]]:
+    """Matmul spec: per A row, per B^T column, a dot product — the blocking
+    and MXU mapping are strategy decisions (``tile_matmul``), not spec."""
+    a = P.var_exp("A", Arr(m, Arr(k, Num())))
+    b = P.var_exp("B", Arr(k, Arr(n, Num())))
+    e = P.Map(lambda row: P.Map(
+        lambda col: P.Reduce(
+            lambda q, acc: P.add(acc, q), P.lit(0.0),
+            P.Map(lambda z: P.mul(P.Fst(z), P.Snd(z)), P.Zip(row, col))),
+        P.Transpose(b)), a)
+    return e, [a, b]
+
+
 def strategy_matmul(m: int, k: int, n: int, bm: int = 128, bk: int = 128
                     ) -> Tuple[Expr, List[P.Var]]:
     """Blocked matmul: grid over row blocks, sequential MXU accumulation over
-    k chunks (the canonical TPU matmul shape, in DPIA vocabulary)."""
+    k chunks (the canonical TPU matmul shape, in DPIA vocabulary) — the
+    same term ``strategies.tile_matmul`` derives from ``naive_matmul``."""
+    from repro.core.dpia.strategies import tiled_matmul_expr
     a = P.var_exp("A", Arr(m, Arr(k, Num())))
     b = P.var_exp("B", Arr(k, Arr(n, Num())))
-
-    def per_block(ablk):
-        # k-chunks of the A block as pure re-views (no materialisation):
-        # Split(bk, Transpose(ablk)) : (k/bk, bk, bm) — chunk^T per step.
-        zipped = P.Zip(P.Split(bk, P.Transpose(ablk)), P.Split(bk, b))
-        return P.Reduce(
-            lambda ab, acc: P.add(
-                acc, P.DotBlock(P.Transpose(P.Fst(ab)), P.Snd(ab))),
-            P.Lit(0.0, Arr(bm, Arr(n, Num()))),
-            zipped, level=P.SEQ)
-
-    e = P.Join(P.Map(per_block, P.Split(bm, a), level=P.GRID(0)))
-    return e, [a, b]
+    return tiled_matmul_expr(a, b, n, bm, bk), [a, b]
 
 
 # ---------------------------------------------------------------------------

@@ -179,8 +179,17 @@ def _compiled(kernel: str, shape: Dict[str, int],
                               jit=bool(opts.jit))
 
     def build():
-        prog = compiler.Program.from_builder(
-            builder, name=kernel, kernel=kernel, shape=shape)
+        # builders may return a ready Program (candidate path — carries its
+        # strategy_trace) or the bare (expr, arg_vars) tuple
+        built = builder()
+        if isinstance(built, compiler.Program):
+            prog = built
+            prog.kernel = prog.kernel or kernel
+            prog.shape = dict(prog.shape or shape)
+        else:
+            expr, arg_vars = built
+            prog = compiler.Program(expr, arg_vars, name=kernel,
+                                    kernel=kernel, shape=shape)
         return prog.check().lower().compile(backend, options=opts)
 
     return compiler.executor_cache().get_or_compile(
@@ -194,6 +203,14 @@ def _default_params(kernel: str, **shape) -> Dict[str, object]:
     and the benchmarks' 'default' rows so they cannot drift."""
     from repro.autotune import space as _sp
     return _sp.default_params(kernel, **shape)
+
+
+def _cand_program(kernel: str, params: Dict[str, object], **shape):
+    """Builder for :func:`_compiled`: the candidate's Program, with the
+    strategy derivation (``strategy_trace``) riding along into the executor
+    and the AOT store."""
+    from repro.autotune import space as _sp
+    return _sp.candidate_from_params(kernel, dict(params), **shape).program()
 
 
 def _record_default(kernel: str, backend: str, opts: CompileOptions,
@@ -220,8 +237,7 @@ def _tuned_or_default(kernel: str, backend: str, opts: CompileOptions,
     params = _tuned(kernel, backend, opts, **shape)
     if params is not None:
         def build(params=params, shape=shape):
-            from repro.autotune import space as _sp
-            return _sp.candidate_from_params(kernel, params, **shape).build()
+            return _cand_program(kernel, params, **shape)
         try:
             return _compiled(kernel, shape, params, build, backend, opts)
         except Exception as e:  # malformed cache params: use the default
@@ -239,9 +255,8 @@ def _tuned_or_default(kernel: str, backend: str, opts: CompileOptions,
             else "no tuned entry (lookup failed or returned nothing)")
 
     def build_default(shape=shape):
-        from repro.autotune import space as _sp
-        return _sp.candidate_from_params(
-            kernel, _default_params(kernel, **shape), **shape).build()
+        return _cand_program(kernel, _default_params(kernel, **shape),
+                             **shape)
     # default params are a pure function of the shape, so params=None ("the
     # default point") keys them
     return _compiled(kernel, shape, None, build_default, backend, opts)
@@ -522,7 +537,7 @@ def _matmul_compiled(backend: str, opts: CompileOptions, m: int, k: int,
         bk = defaults["bk"]
     return _compiled(
         "matmul", dict(m=m, k=k, n=n), dict(bm=bm, bk=bk),
-        lambda: dpia_blas.strategy_matmul(m, k, n, bm=bm, bk=bk),
+        lambda: _cand_program("matmul", {"bm": bm, "bk": bk}, m=m, k=k, n=n),
         backend, opts)
 
 
@@ -571,7 +586,8 @@ def _rmsnorm_compiled(backend: str, opts: CompileOptions, rows: int, d: int,
         rb = _default_params("rmsnorm", rows=rows, d=d)["row_block"]
     return _compiled(
         "rmsnorm", dict(rows=rows, d=d), dict(row_block=rb, eps=eps),
-        lambda: dpia_blas.strategy_rmsnorm(rows, d, eps, row_block=rb),
+        lambda: _cand_program("rmsnorm", {"row_block": rb},
+                              rows=rows, d=d, eps=eps),
         backend, opts)
 
 
@@ -617,7 +633,7 @@ def _softmax_compiled(backend: str, opts: CompileOptions, rows: int, d: int):
         rb = _default_params("softmax", rows=rows, d=d)["row_block"]
     return _compiled(
         "softmax", dict(rows=rows, d=d), dict(row_block=rb),
-        lambda: dpia_blas.strategy_softmax(rows, d, row_block=rb),
+        lambda: _cand_program("softmax", {"row_block": rb}, rows=rows, d=d),
         backend, opts)
 
 

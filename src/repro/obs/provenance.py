@@ -59,6 +59,7 @@ class Decision:
     measured_us: Optional[float] = None
     n_candidates: int = 0
     note: str = ""
+    strategy_trace: Optional[dict] = None  # serialised StrategyTrace doc
     t_wall: float = dataclasses.field(default_factory=time.time)
 
     def to_doc(self) -> dict:
@@ -87,9 +88,22 @@ class Decision:
             why.append(f"measured {self.measured_us:.1f} us")
         if why:
             lines.append("    " + "; ".join(why))
+        if self.strategy_trace and self.strategy_trace.get("steps"):
+            lines.append("    derived by " + _trace_str(self.strategy_trace))
         if self.note:
             lines.append(f"    note: {self.note}")
         return "\n".join(lines)
+
+
+def _trace_str(doc: dict) -> str:
+    """Render a serialised StrategyTrace (lazy import: repro.strategy is a
+    consumer of obs, so the dependency must not run at module load)."""
+    try:
+        from repro.strategy.lang import StrategyTrace
+        return StrategyTrace.from_doc(doc).describe()
+    except Exception:
+        return " ; ".join(str(s.get("rule", "?"))
+                          for s in doc.get("steps", ()))
 
 
 def _plain(v):

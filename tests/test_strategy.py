@@ -1,0 +1,402 @@
+"""repro.strategy — combinator laws, traversal order, trace round-trips,
+oracle equality of the strategy-program spaces against the legacy builders,
+mining, seeding, and trace provenance through tune/Program/AOT.
+
+Structural identity throughout is ``repro.strategy.fingerprint`` (binder-
+stable), not ``repr`` (whose fresh-variable counter is process-global)."""
+import json
+import warnings
+
+import numpy as np
+import pytest
+
+from repro import autotune, compiler, obs
+from repro import strategy as st
+from repro.autotune import space
+from repro.core.dpia import interp, phrases as P, strategies
+from repro.core.dpia.types import Arr, Num
+from repro.kernels import dpia_blas
+from repro.strategy import mine
+
+
+def fp(e):
+    return st.fingerprint(e)
+
+
+def naive_dot(n=64):
+    expr, argv = dpia_blas.naive_dot(n)
+    return expr, argv
+
+
+FUSE = st.rule("fuse_map_into_reduce")
+BLOCK = st.rule("blocked_reduce", block=16, partial_level="grid(0)",
+                combine="add")
+
+
+# ---------------------------------------------------------------------------
+# combinator laws (failure as a value, monoid structure)
+# ---------------------------------------------------------------------------
+
+def test_seq_identity_laws():
+    e, _ = naive_dot()
+    s = FUSE
+    direct = s.apply(e)
+    left = st.seq(st.id_(), s).apply(e)
+    right = st.seq(s, st.id_()).apply(e)
+    assert direct.ok and left.ok and right.ok
+    assert fp(direct.phrase) == fp(left.phrase) == fp(right.phrase)
+    # id contributes no trace steps: seq(id, s) traces exactly like s
+    assert direct.trace.to_doc() == left.trace.to_doc() \
+        == right.trace.to_doc()
+    # and the empty seq IS the identity
+    empty = st.seq().apply(e)
+    assert empty.ok and fp(empty.phrase) == fp(e) and not empty.trace.steps
+
+
+def test_seq_fails_when_any_half_fails():
+    e, _ = naive_dot()
+    assert not st.seq(st.fail_(), FUSE).apply(e)
+    assert not st.seq(FUSE, st.fail_()).apply(e)
+    r = st.seq(FUSE, st.fail_()).apply(e)
+    assert not r.ok and r.phrase is None and r.reason
+
+
+def test_alt_is_left_biased_and_try_fail_is_identity():
+    e, _ = naive_dot()
+    both = st.alt(FUSE, st.id_()).apply(e)
+    assert both.ok and both.trace.steps  # FUSE won, not the identity
+    fell = st.alt(st.fail_(), st.id_()).apply(e)
+    assert fell.ok and fp(fell.phrase) == fp(e)
+    tried = st.try_(st.fail_()).apply(e)
+    assert tried.ok and fp(tried.phrase) == fp(e) and not tried.trace.steps
+
+
+def test_rule_failure_is_a_value_not_an_exception():
+    e, _ = naive_dot()
+    # tile_matmul cannot possibly match a dot — must fail, never raise
+    r = st.rule("tile_matmul", bm=8, bk=8).apply(e)
+    assert not r.ok and r.reason
+
+
+def test_repeat_terminates_without_progress_and_always_succeeds():
+    e, _ = naive_dot()
+    # id succeeds forever but never makes progress: repeat must stop
+    r = st.repeat(st.id_()).apply(e)
+    assert r.ok and fp(r.phrase) == fp(e)
+    # a failing body leaves the term unchanged (zero iterations)
+    r2 = st.repeat(st.fail_()).apply(e)
+    assert r2.ok and fp(r2.phrase) == fp(e) and not r2.trace.steps
+    # a once-applicable rule applies once, then the failure stops the loop
+    r3 = st.repeat(FUSE).apply(e)
+    assert r3.ok
+    assert [s.rule for s in r3.trace.steps] == ["fuse_map_into_reduce"]
+
+
+def test_repeat_n_fails_if_any_iteration_fails():
+    e, _ = naive_dot()
+    assert st.repeat_n(FUSE, 1).apply(e).ok
+    assert not st.repeat_n(FUSE, 2).apply(e)  # fuse only applies once
+
+
+# ---------------------------------------------------------------------------
+# traversals: order, paths, HOAS binders
+# ---------------------------------------------------------------------------
+
+def test_topdown_vs_bottomup_first_match():
+    """On the fused+blocked dot, vpu_reduce matches BOTH the outer
+    partials-combine and the inner per-block reduce (under the grid map's
+    binder).  topdown takes the outermost; bottomup the innermost — the
+    traversal IS the choice, which is why the kernel spaces use bottomup."""
+    e, _ = naive_dot(64)
+    blocked = st.seq(FUSE, BLOCK).apply(e)
+    assert blocked.ok
+    top = st.topdown(st.rule("vpu_reduce")).apply(blocked.phrase)
+    bot = st.bottomup(st.rule("vpu_reduce")).apply(blocked.phrase)
+    assert top.ok and bot.ok
+    assert top.trace.steps[-1].path == ()
+    assert bot.trace.steps[-1].path == ("e", "f")
+    assert fp(top.phrase) != fp(bot.phrase)
+
+
+def test_bottomup_rewrites_under_binders():
+    """The bottomup vpu_reduce fires inside the grid Map's HOAS closure —
+    the rebuilt binder must produce the rewritten body on every call."""
+    e, argv = naive_dot(64)
+    res = st.seq(FUSE, BLOCK,
+                 st.bottomup(st.rule("vpu_reduce"))).apply(e)
+    assert res.ok
+    rng = np.random.RandomState(0)
+    xs = rng.randn(64).astype("float32")
+    ys = rng.randn(64).astype("float32")
+    env = {"xs": xs, "ys": ys}
+    np.testing.assert_allclose(np.asarray(interp.interp(res.phrase, env)),
+                               xs @ ys, rtol=1e-5)
+
+
+def test_at_navigates_to_recorded_path():
+    e, _ = naive_dot(64)
+    blocked = st.seq(FUSE, BLOCK).apply(e)
+    r = st.at(("e", "f"), st.rule("vpu_reduce")).apply(blocked.phrase)
+    bot = st.bottomup(st.rule("vpu_reduce")).apply(blocked.phrase)
+    assert r.ok and fp(r.phrase) == fp(bot.phrase)
+    assert not st.at(("e",), st.rule("vpu_reduce")).apply(blocked.phrase)
+
+
+def test_one_vacuous_on_leaves_all_succeeds():
+    x = P.var_exp("x", Arr(8, Num()))
+    assert not st.one(st.id_()).apply(x)       # a leaf has no children
+    assert st.all_(st.fail_()).apply(x).ok     # vacuously true on leaves
+
+
+# ---------------------------------------------------------------------------
+# traces: JSON round-trip + deterministic replay
+# ---------------------------------------------------------------------------
+
+def test_trace_json_round_trip_and_replay():
+    e, _ = naive_dot(64)
+    prog = st.seq(FUSE, BLOCK, st.bottomup(st.rule("vpu_reduce")))
+    res = prog.apply(e)
+    assert res.ok
+    doc = json.loads(json.dumps(res.trace.to_doc()))
+    assert st.is_trace_doc(doc) and doc["version"] == 1
+    assert st.StrategyTrace.from_doc(doc).to_doc() == res.trace.to_doc()
+    replayed = st.replay(doc, e)
+    assert replayed.ok
+    assert fp(replayed.phrase) == fp(res.phrase)
+    assert replayed.trace.to_doc() == res.trace.to_doc()
+
+
+def test_replay_of_malformed_trace_is_failure_value():
+    e, _ = naive_dot(64)
+    bad = {"version": 1, "steps": [{"rule": "no_such_rule", "path": [],
+                                    "params": {}}]}
+    assert not st.replay(bad, e)
+
+
+# ---------------------------------------------------------------------------
+# oracle equality: the six kernel spaces as strategy programs
+# ---------------------------------------------------------------------------
+
+SHAPES = {
+    "dot": {"n": 512}, "asum": {"n": 512}, "scal": {"n": 512},
+    "matmul": {"m": 64, "k": 64, "n": 64},
+    "rmsnorm": {"rows": 16, "d": 64},
+    "softmax": {"rows": 16, "d": 64},
+}
+
+
+@pytest.mark.parametrize("kernel", sorted(SHAPES))
+def test_space_candidates_equal_legacy_builders(kernel):
+    """Every enumerated candidate (now derived by its strategy program) is
+    phrase-identical to the pre-strategy-language hand-built term."""
+    shape = SHAPES[kernel]
+    cands = space.enumerate_space(kernel, **shape)
+    assert cands
+    for cand in cands:
+        legacy = space.legacy_candidate(kernel, cand.params_dict, **shape)
+        e_new, argv_new = cand.build()
+        e_old, argv_old = legacy.build()
+        assert fp(e_new) == fp(e_old), \
+            f"{kernel} {cand.params_key()} diverged from the legacy builder"
+        assert [v.name for v in argv_new] == [v.name for v in argv_old]
+        # non-identity candidates must be able to say how they were derived
+        doc = cand.trace_doc()
+        if cand.params_dict.get("block") is not None or \
+                kernel in ("matmul", "rmsnorm", "softmax"):
+            assert doc and doc["steps"]
+
+
+def test_generic_space_covers_fused_term():
+    expr, _ = st.fused_rmsnorm_matmul(32, 64, 32)
+    got = st.generic_space(expr, blocks=(8, 16, 32), tiles=(16, 32, 64))
+    rewrites = {p["rewrite"] for p, _, _ in got}
+    assert "id" in rewrites and "tile_matmul" in rewrites
+    assert len(got) > 2
+    # every surviving candidate type-checks (well-typed by construction)
+    for _, _, res in got:
+        P.type_of(res.phrase)
+
+
+# ---------------------------------------------------------------------------
+# mining + seeding
+# ---------------------------------------------------------------------------
+
+def _trace(steps):
+    return {"version": 1, "steps": steps}
+
+
+def _step(rule, block):
+    return [{"rule": "fuse_map_into_reduce", "path": [], "params": {}},
+            {"rule": rule, "path": [],
+             "params": {"block": block, "combine": "add"}}]
+
+
+def test_anti_unify_holes_differing_params():
+    t1, t2 = _trace(_step("blocked_reduce", 128)), \
+        _trace(_step("blocked_reduce", 256))
+    g = mine.anti_unify(t1, t2)
+    assert [s.rule for s in g] == ["fuse_map_into_reduce", "blocked_reduce"]
+    params = dict(g[1].params)
+    assert params["block"] == mine.HOLE and params["combine"] == "add"
+    a = mine.Abstraction("a", g)
+    assert mine.matches(a, t1) and mine.matches(a, t2)
+    assert mine.matches(a, _trace(_step("blocked_reduce", 999)))
+    assert not mine.matches(a, _trace(_step("split_join", 128)))
+
+
+def test_mine_respects_min_support_and_persists(tmp_path):
+    traces = [_trace(_step("blocked_reduce", b)) for b in (128, 256, 512)]
+    traces.append(_trace([{"rule": "tile_matmul", "path": [],
+                           "params": {"bm": 32, "bk": 32}}]))
+    abstractions = mine.mine(traces, min_support=3)
+    assert abstractions and abstractions[0].support == 3
+    assert all(a.support >= 3 for a in abstractions)
+    path = str(tmp_path / "cache.abstractions.json")
+    mine.save_abstractions(path, abstractions)
+    loaded = mine.load_abstractions(path)
+    assert [a.to_doc() for a in loaded] == [a.to_doc() for a in abstractions]
+    assert mine.load_abstractions(str(tmp_path / "absent.json")) == []
+    assert mine.abstractions_path("/x/tuning_cache.json") \
+        == "/x/tuning_cache.abstractions.json"
+
+
+def test_seeded_order_is_a_stable_partition():
+    cands = space.enumerate_space("dot", n=512)
+    abstraction = mine.Abstraction("a", mine.anti_unify(
+        _trace(_step("blocked_reduce", 128)),
+        _trace(_step("blocked_reduce", 256))))
+    ordered = mine.seeded_order(cands, [abstraction])
+    assert sorted(c.params_key() for c in ordered) \
+        == sorted(c.params_key() for c in cands)
+    hit = [c for c in ordered
+           if c.trace_doc() and mine.matches(abstraction, c.trace_doc())]
+    assert hit and ordered[:len(hit)] == hit  # all hits first, order kept
+    assert ordered[0].params_dict != cands[0].params_dict  # naive deferred
+
+
+def test_mined_corpus_seeds_tune(tmp_path):
+    cache = str(tmp_path / "tuning_cache.json")
+    for n in (512, 1024, 2048):
+        autotune.tune("dot", n=n, cache=cache, measure=False)
+        autotune.tune("asum", n=n, cache=cache, measure=False)
+    from repro.autotune.cache import TuningCache
+    abstractions = mine.mine(TuningCache(cache))
+    assert abstractions
+    mine.save_abstractions(mine.abstractions_path(cache), abstractions)
+    was_enabled = obs.enabled()
+    obs.enable()
+    try:
+        res = autotune.tune("dot", n=4096, cache=cache, measure=True,
+                            iters=1, top_k=1)
+        names = [e["name"] for e in obs.trace_events()]
+    finally:
+        if not was_enabled:
+            obs.disable()
+    assert res.source == "measured" and res.strategy_trace
+    assert "autotune.seeded" in names
+
+
+# ---------------------------------------------------------------------------
+# satellite: hardened strategies.search
+# ---------------------------------------------------------------------------
+
+def test_search_skips_raising_cost_fn_with_warning():
+    a, b, c = P.lit(1.0), P.lit(2.0), P.lit(3.0)
+    costs = {id(a): 5.0, id(c): 1.0}
+
+    def cost_fn(x):
+        if x is b:
+            raise RuntimeError("unpriceable term")
+        return costs[id(x)]
+
+    strategies._warned_cost_failure = False
+    with pytest.warns(RuntimeWarning, match="cost_fn raised"):
+        assert strategies.search([a, b, c], cost_fn) is c
+    # once per process: the second failure is silent (event-only)
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        assert strategies.search([a, b, c], cost_fn) is c
+    strategies._warned_cost_failure = False
+    # every candidate raising degrades to the deterministic first pick
+    with pytest.warns(RuntimeWarning):
+        def always(_):
+            raise ValueError("nope")
+        assert strategies.search([a, b], always) is a
+
+
+# ---------------------------------------------------------------------------
+# provenance: tune -> cache/obs, Program, AOT
+# ---------------------------------------------------------------------------
+
+def test_tune_records_strategy_trace_and_explains_it(tmp_path):
+    cache = str(tmp_path / "tuning_cache.json")
+    res = autotune.tune("dot", n=1024, cache=cache, measure=False)
+    assert res.strategy_trace and res.strategy_trace["steps"]
+    rules = [s["rule"] for s in res.strategy_trace["steps"]]
+    assert "blocked_reduce" in rules
+    # the cache record carries it, and the hit serves it back
+    hit = autotune.tune("dot", n=1024, cache=cache, measure=False)
+    assert hit.source == "cache"
+    assert hit.strategy_trace == res.strategy_trace
+    d = obs.provenance.get(res.key)
+    assert d is not None and d.strategy_trace == res.strategy_trace
+    assert "derived by" in d.describe()
+    assert "blocked_reduce" in obs.explain(res.key)
+
+
+def test_tune_with_explicit_strategy_programs(tmp_path):
+    cache = str(tmp_path / "tuning_cache.json")
+    progs = [st.named("fuse+block", st.seq(
+        FUSE, st.rule("blocked_reduce", block=256,
+                      partial_level="grid(0)", combine="add")))]
+    res = autotune.tune("dot", n=1024, cache=cache, measure=False,
+                        strategies=progs)
+    assert res.params in ({"strategy": "fuse+block"}, {"strategy": "id"})
+    assert res.strategy_trace is not None
+
+
+def test_program_lower_accepts_strategy_and_trace():
+    prog = compiler.Program.from_kernel(
+        "dot", params={"block": None, "leaf": "seq"}, n=256)
+    s = st.seq(FUSE, st.rule("blocked_reduce", block=64,
+                             partial_level="grid(0)", combine="add"))
+    p2 = prog.lower(s)
+    assert p2.strategy_trace and p2.strategy_trace["steps"]
+    p3 = prog.lower(p2.strategy_trace)  # replay the serialised derivation
+    assert fp(p2.expr) == fp(p3.expr)
+    assert p3.strategy_trace == p2.strategy_trace
+    with pytest.raises(ValueError, match="failed"):
+        prog.lower(st.fail_())
+
+
+def test_program_export_round_trips_strategy_trace(tmp_path):
+    prog = compiler.Program.from_kernel("matmul", m=64, k=64, n=64)
+    assert prog.strategy_trace, "from_kernel must attach the derivation"
+    assert prog.strategy_trace["steps"][0]["rule"] == "tile_matmul"
+    path = str(tmp_path / "mm.json")
+    prog.check().export(path)
+    loaded = compiler.Program.load(path)
+    assert loaded.strategy_trace == prog.strategy_trace
+
+
+def test_aot_loaded_executor_reports_derivation(tmp_path):
+    from repro.kernels import ops
+    cache = str(tmp_path / "tuning_cache.json")
+    aot = str(tmp_path / "aot")
+    ops.clear_caches()
+    try:
+        with compiler.options(backend="dpia-jnp", tuning_cache=cache):
+            x = np.ones((8, 64), np.float32)
+            w = np.ones(64, np.float32)
+            np.testing.assert_allclose(np.asarray(ops.rmsnorm(x, w)), x,
+                                       rtol=1e-5)
+            assert compiler.executor_cache().save_aot(aot) >= 1
+            compiler.executor_cache().clear()
+            obs.provenance.clear()
+            assert compiler.executor_cache().load_aot(aot) >= 1
+        loaded = [d for d in obs.provenance.decisions()
+                  if d.origin == "aot-loaded"]
+        assert loaded and any(d.strategy_trace and d.strategy_trace["steps"]
+                              for d in loaded)
+    finally:
+        ops.clear_caches()
