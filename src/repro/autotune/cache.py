@@ -19,16 +19,25 @@ On-disk format (JSON, human-editable):
 
 Keys are ``kernel|shape|dtype|backend|mesh``; every component the compiled
 artefact depends on is in the key, so serving never has to re-search — a hit
-is always safe to reuse.  Writes are atomic (tmp + rename) and corrupted or
-version-skewed files are treated as empty rather than fatal.
+is always safe to reuse.
+
+The store is self-healing (``repro.ft.artefacts``): writes are atomic
+(tmp + rename) and carry an embedded content checksum; a corrupt FILE is
+quarantined to ``<path>.quarantine/`` and reported (warn-once log +
+always-on ``artefact.load_failed`` counter), and a corrupt ENTRY —
+well-formed file, malformed record — is quarantined individually
+(``artefact.entry_quarantined``) while the healthy entries load.  Either
+way the next ``tune()`` sees a miss and rebuilds the lost decisions;
+nothing is ever silently dropped, and nothing aborts the load.
 """
 from __future__ import annotations
 
 import json
 import os
-import tempfile
 import threading
 from typing import Dict, Optional
+
+from repro.ft import artefacts
 
 VERSION = 1
 
@@ -66,36 +75,59 @@ class TuningCache:
         self._loaded = False
 
     # -- disk ---------------------------------------------------------------
+
+    @staticmethod
+    def _valid_record(v) -> bool:
+        """Shape check for one entry: a dict whose ``params`` (when present)
+        is a dict — the contract ``kernels.ops``/``autotune.get_tuned``
+        rely on.  Anything else is a corrupt record."""
+        return isinstance(v, dict) and isinstance(v.get("params", {}), dict)
+
     def _load(self) -> None:
         if self._loaded:
             return
         self._loaded = True
-        try:
-            with open(self.path) as f:
-                doc = json.load(f)
-            if isinstance(doc, dict) and doc.get("version") == VERSION:
-                entries = doc.get("entries", {})
-                if isinstance(entries, dict):
-                    # disk never overrides fresher in-process results
-                    for k, v in entries.items():
-                        self._mem.setdefault(k, v)
-        except (OSError, ValueError):
-            pass  # missing or corrupt cache: start empty
+        doc = artefacts.load_json(self.path, what="tuning cache")
+        if doc is None:
+            return  # missing (cold) or corrupt (quarantined + reported)
+        if doc.get("version") != VERSION:
+            return  # version skew: expected after an upgrade, start empty
+        entries = doc.get("entries", {})
+        if not isinstance(entries, dict):
+            return
+        bad = {k: v for k, v in entries.items() if not self._valid_record(v)}
+        if bad:
+            # entry-level self-healing: park the malformed records beside
+            # the cache, keep the healthy ones, and let the next tune()
+            # rebuild what was lost
+            from repro import obs
+            qdir = self.path + ".quarantine"
+            qpath = None
+            try:
+                os.makedirs(qdir, exist_ok=True)
+                qpath = os.path.join(
+                    qdir, f"entries-{abs(hash(tuple(sorted(bad)))):x}.json")
+                with open(qpath, "w") as f:
+                    json.dump(bad, f, indent=1, sort_keys=True, default=str)
+            except OSError:
+                qpath = None
+            obs.counter("artefact.entry_quarantined").inc(len(bad))
+            artefacts.report_load_failure(
+                self.path, "tuning cache",
+                ValueError(f"{len(bad)} malformed entr"
+                           f"{'y' if len(bad) == 1 else 'ies'}: "
+                           f"{sorted(bad)[:4]}"), qpath)
+        # disk never overrides fresher in-process results
+        for k, v in entries.items():
+            if k not in bad:
+                self._mem.setdefault(k, v)
 
     def _save(self) -> None:
         doc = {"version": VERSION, "entries": self._mem}
-        d = os.path.dirname(self.path) or "."
-        os.makedirs(d, exist_ok=True)
-        fd, tmp = tempfile.mkstemp(dir=d, prefix=".autotune-", suffix=".json")
         try:
-            with os.fdopen(fd, "w") as f:
-                json.dump(doc, f, indent=1, sort_keys=True)
-            os.replace(tmp, self.path)
+            artefacts.save_json(self.path, doc)
         except OSError:
-            try:
-                os.unlink(tmp)
-            except OSError:
-                pass
+            pass  # persistence is best-effort; the in-process memo stands
 
     # -- API ----------------------------------------------------------------
     def get(self, key: str) -> Optional[dict]:

@@ -21,12 +21,13 @@ exactly as for a freshly staged Program.
 from __future__ import annotations
 
 import hashlib
-import json
 import os
 import threading
 from typing import Callable, Dict, Optional, Tuple
 
 from repro import obs
+from repro.ft import artefacts
+from repro.testing import faults
 
 __all__ = ["ExecutorCache", "make_key", "default_cache"]
 
@@ -89,6 +90,10 @@ class ExecutorCache:
                 self._hits += 1
             obs.event("executor_cache.hit", key=key)
             return fn
+        # deterministic build-failure drill (``executor.build``, ctx: key):
+        # raises here so the op layer's degradation ladder handles it the
+        # same way as a real staging/compile failure
+        faults.raise_if("executor.build", key=key)
         with obs.span("executor_cache.build", key=key):
             fn = build()
         with self._lock:
@@ -176,10 +181,10 @@ class ExecutorCache:
                 "jit": bool(meta.get("jit", True)),
                 "program": prog_doc,
             }
-            tmp = path + ".tmp"
-            with open(tmp, "w") as f:
-                json.dump(doc, f, indent=1, sort_keys=True)
-            os.replace(tmp, path)
+            # checksummed + atomic (repro.ft.artefacts): a torn or
+            # bit-flipped program file is detected and quarantined at load
+            # instead of silently skipped
+            artefacts.save_json(path, doc)
             written += 1
         return written
 
@@ -188,20 +193,29 @@ class ExecutorCache:
 
         Each artefact is rebuilt as an imperative-only Program and compiled
         through the backend registry with its persisted options bits —
-        Stage I->II and the SCIR check are skipped entirely.  Corrupt or
-        version-skewed files are ignored (an AOT store is a cache, not a
-        source of truth).  Returns the number of executors loaded."""
+        Stage I->II and the SCIR check are skipped entirely.  Version skew
+        is a silent skip (expected after an upgrade); a CORRUPT file —
+        unparseable, or failing its embedded checksum — is quarantined to
+        ``<directory>/.quarantine/`` and reported through the always-on
+        ``artefact.load_failed`` counter (repro.ft.artefacts), never
+        silently dropped.  A file whose program fails to REBUILD (e.g. its
+        backend grew unmet requirements) is reported but left in place —
+        the file is intact; the environment changed.  Returns the number
+        of executors loaded."""
         from .backends import get_backend
         from .program import Program
         if not os.path.isdir(directory):
             return 0
+        qdir = os.path.join(directory, ".quarantine")
         loaded = 0
         for name in sorted(os.listdir(directory)):
-            if not name.endswith(".json"):
+            if not name.endswith(".json") or name.startswith("."):
                 continue
+            path = os.path.join(directory, name)
+            doc = artefacts.load_json(path, what="AOT program", qdir=qdir)
+            if doc is None:
+                continue  # corrupt (quarantined + reported) or vanished
             try:
-                with open(os.path.join(directory, name)) as f:
-                    doc = json.load(f)
                 if doc.get("version") != AOT_VERSION:
                     continue
                 key = doc["key"]
@@ -233,9 +247,12 @@ class ExecutorCache:
                            note=f"program {prog.name!r} rebuilt from "
                                 f"{directory}")
                 loaded += 1
-            except (OSError, ValueError, KeyError, TypeError):
-                # TypeError: an artefact whose backend now has unmet compile
-                # requirements — skip it, never poison the whole load
+            except (OSError, ValueError, KeyError, TypeError) as e:
+                # a well-formed file that cannot be rebuilt here (e.g.
+                # TypeError: its backend now has unmet compile
+                # requirements) — report, skip, never poison the whole
+                # load; the file stays for a process that CAN rebuild it
+                artefacts.report_load_failure(path, "AOT program", e)
                 continue
         return loaded
 

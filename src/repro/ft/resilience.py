@@ -28,7 +28,18 @@ log = logging.getLogger("repro.ft")
 
 
 class Watchdog:
-    """Flags steps exceeding ``deadline_s`` (straggler mitigation hook)."""
+    """Flags steps exceeding ``deadline_s`` (straggler mitigation hook).
+
+    Race-free: ``threading.Timer.cancel()`` does not stop a callback that
+    has already started, so ``_fire`` can run concurrently with — or just
+    after — ``disarm()`` on the step-completion path, recording a spurious
+    straggler for a step that finished in time.  Every ``arm()`` therefore
+    issues a generation token; ``_fire`` re-checks under the lock that its
+    generation is still the armed one (and fires at most once per arm),
+    and ``disarm()`` retires the generation before cancelling the timer.
+    Used by ``TrainLoop`` per train step and by the serving engines as the
+    chunk-level straggler detector (``repro.serve.engine``).
+    """
 
     def __init__(self, deadline_s: float = 300.0,
                  on_straggler: Optional[Callable[[int, float], None]] = None):
@@ -41,21 +52,40 @@ class Watchdog:
         self._armed_at: Optional[float] = None
         self._step = 0
         self._timer: Optional[threading.Timer] = None
+        self._lock = threading.Lock()
+        self._gen = 0           # incremented on every arm
+        self._live_gen = -1     # the generation allowed to fire (-1: none)
+        self._fired = False     # current generation already fired
 
     def arm(self, step: int) -> None:
-        self.disarm()
-        self._step = step
-        self._armed_at = time.monotonic()
-        self._timer = threading.Timer(self.deadline, self._fire)
-        self._timer.daemon = True
-        self._timer.start()
+        with self._lock:
+            self._retire_locked()
+            self._gen += 1
+            self._live_gen = self._gen
+            self._fired = False
+            self._step = step
+            self._armed_at = time.monotonic()
+            self._timer = threading.Timer(self.deadline, self._fire,
+                                          args=(self._gen,))
+            self._timer.daemon = True
+            self._timer.start()
 
-    def _fire(self) -> None:
-        dt = time.monotonic() - (self._armed_at or time.monotonic())
-        self.events.append((self._step, dt))
-        self.on_straggler(self._step, dt)
+    def _fire(self, gen: int) -> None:
+        with self._lock:
+            if gen != self._live_gen or self._fired:
+                return  # disarmed (step completed) or duplicate firing
+            self._fired = True
+            step = self._step
+            dt = time.monotonic() - (self._armed_at or time.monotonic())
+            self.events.append((step, dt))
+        self.on_straggler(step, dt)
 
     def disarm(self) -> None:
+        with self._lock:
+            self._retire_locked()
+
+    def _retire_locked(self) -> None:
+        self._live_gen = -1
         if self._timer is not None:
             self._timer.cancel()
             self._timer = None

@@ -230,6 +230,38 @@ def _record_default(kernel: str, backend: str, opts: CompileOptions,
                layout=opts.kv_layout, note=note)
 
 
+def _compiled_or_reference(kernel: str, shape: Dict[str, int],
+                           params: Optional[Dict[str, object]], builder,
+                           backend: str, opts: CompileOptions
+                           ) -> compiler.CompiledKernel:
+    """The backend rung of the degradation ladder (docs/resilience.md).
+
+    Builds the executor for ``backend``; when staging/compilation fails —
+    a broken Pallas lowering, a failed AOT rebuild, an injected
+    ``executor.build`` fault — the op DEGRADES to the ``dpia-jnp``
+    reference backend (same strategy, reference lowering) instead of
+    raising into the model's forward pass.  The degradation is recorded as
+    provenance origin ``degraded(<backend>->jnp)`` + the
+    ``kernels.degradations`` counter, so ``obs.explain()`` shows why the
+    strategy changed.  The jnp rung itself has nothing below it: its
+    failures propagate."""
+    try:
+        return _compiled(kernel, shape, params, builder, backend, opts)
+    except Exception as e:
+        if backend == "jnp":
+            raise
+        _warn_once(("degraded", kernel, backend),
+                   f"{kernel!r} failed to build/compile for backend "
+                   f"{backend!r} ({type(e).__name__}: {e}); degrading to "
+                   f"the dpia-jnp reference path")
+        obs.counter("kernels.degradations").inc()
+        _record_default(kernel, "jnp", opts, shape,
+                        f"degraded({backend}->jnp)",
+                        f"backend {backend!r} build failed: "
+                        f"{type(e).__name__}: {e}")
+        return _compiled(kernel, shape, params, builder, "jnp", opts)
+
+
 def _tuned_or_default(kernel: str, backend: str, opts: CompileOptions,
                       shape: Dict[str, int]) -> compiler.CompiledKernel:
     """The op-layer DPIA path: tuned candidate if available+buildable, else
@@ -246,7 +278,9 @@ def _tuned_or_default(kernel: str, backend: str, opts: CompileOptions,
                        f"{backend!r}) failed to build/compile: "
                        f"{type(e).__name__}: {e}; using the default "
                        f"strategy params")
-            _record_default(kernel, backend, opts, shape, "fallback-default",
+            obs.counter("kernels.degradations").inc()
+            _record_default(kernel, backend, opts, shape,
+                            "degraded(tuned->default)",
                             f"tuned params {params!r} failed to build")
     else:
         _record_default(
@@ -258,8 +292,10 @@ def _tuned_or_default(kernel: str, backend: str, opts: CompileOptions,
         return _cand_program(kernel, _default_params(kernel, **shape),
                              **shape)
     # default params are a pure function of the shape, so params=None ("the
-    # default point") keys them
-    return _compiled(kernel, shape, None, build_default, backend, opts)
+    # default point") keys them; a failing default build degrades one rung
+    # further, to the dpia-jnp reference backend
+    return _compiled_or_reference(kernel, shape, None, build_default,
+                                  backend, opts)
 
 
 # ---------------------------------------------------------------------------
@@ -489,8 +525,9 @@ def _gemv_ref(impl, opts, a, x):
 
 def _gemv_compiled(backend: str, opts: CompileOptions, m: int, n: int):
     # gemv has no autotune space yet; always the default row-blocked strategy
-    return _compiled("gemv", dict(m=m, n=n), None,
-                     lambda: dpia_blas.strategy_gemv(m, n), backend, opts)
+    return _compiled_or_reference("gemv", dict(m=m, n=n), None,
+                                  lambda: dpia_blas.strategy_gemv(m, n),
+                                  backend, opts)
 
 
 @_impl_handler("gemv", "dpia-jnp", "dpia-pallas")
@@ -535,7 +572,7 @@ def _matmul_compiled(backend: str, opts: CompileOptions, m: int, k: int,
         bm = defaults["bm"]  # malformed/hand-edited cache entry
     if not (isinstance(bk, int) and bk > 0 and k % bk == 0):
         bk = defaults["bk"]
-    return _compiled(
+    return _compiled_or_reference(
         "matmul", dict(m=m, k=k, n=n), dict(bm=bm, bk=bk),
         lambda: _cand_program("matmul", {"bm": bm, "bk": bk}, m=m, k=k, n=n),
         backend, opts)
@@ -584,7 +621,7 @@ def _rmsnorm_compiled(backend: str, opts: CompileOptions, rows: int, d: int,
         # malformed/missing cache entry; eps is threaded separately, so the
         # builder below stays direct and only the params value is shared
         rb = _default_params("rmsnorm", rows=rows, d=d)["row_block"]
-    return _compiled(
+    return _compiled_or_reference(
         "rmsnorm", dict(rows=rows, d=d), dict(row_block=rb, eps=eps),
         lambda: _cand_program("rmsnorm", {"row_block": rb},
                               rows=rows, d=d, eps=eps),
@@ -631,7 +668,7 @@ def _softmax_compiled(backend: str, opts: CompileOptions, rows: int, d: int):
     rb = params.get("row_block")
     if not (isinstance(rb, int) and rb > 0 and rows % rb == 0):
         rb = _default_params("softmax", rows=rows, d=d)["row_block"]
-    return _compiled(
+    return _compiled_or_reference(
         "softmax", dict(rows=rows, d=d), dict(row_block=rb),
         lambda: _cand_program("softmax", {"row_block": rb}, rows=rows, d=d),
         backend, opts)

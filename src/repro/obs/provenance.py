@@ -22,8 +22,15 @@ the tuner actually ran the candidate, and the **origin**:
     cache(analytic)   served from the persistent tuning cache (an
     cache(measured)     earlier process did the work; suffix = how)
     default           no tuned entry — the kernel's canonical default params
-    fallback-default  a tuned entry existed but failed to build/compile
     aot-loaded        an executor rebuilt from the AOT program store
+    degraded(a->b)    the degradation ladder fired: strategy ``a`` failed to
+                      build/compile/validate and the runtime fell back to
+                      ``b`` — e.g. ``degraded(tuned->default)`` (a tuned
+                      entry failed, canonical defaults used),
+                      ``degraded(pallas->jnp)`` (default params failed too,
+                      dpia-jnp reference used), ``degraded(paged->dense)``
+                      (KV block pool corrupt, serving switched layouts).
+                      See docs/resilience.md for the full ladder.
 
 Recording is always on (it happens at *tuning* time, which the op layer
 memoises per process — never on a hot call path) and keyed by the same

@@ -47,6 +47,7 @@ import contextlib
 import dataclasses
 import logging
 import os
+import time
 from typing import Dict, List, Optional
 
 import jax
@@ -54,8 +55,12 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import obs
+from repro.ft.resilience import Watchdog
 from repro.models.transformer import Model
+from repro.serve.resilience import (RequestResult, ResilienceConfig,
+                                    record_degradation)
 from repro.serve.scheduler import Scheduler, pick_bucket, seq_buckets
+from repro.testing import faults
 
 log = logging.getLogger("repro.serve.engine")
 
@@ -145,6 +150,13 @@ class Request:
     temperature: float = 0.0
     top_k: int = 0
     out_tokens: Optional[List[int]] = None
+    # per-request deadlines, both measured from submission: ``deadline_s``
+    # is end-to-end, ``ttft_deadline_s`` applies until the first token.
+    # Enforced at chunk boundaries (the host never sees mid-chunk time);
+    # an expired request ends in terminal state "timeout" with its partial
+    # tokens intact (repro.serve.resilience.STATES).
+    deadline_s: Optional[float] = None
+    ttft_deadline_s: Optional[float] = None
 
 
 # ---------------------------------------------------------------------------
@@ -156,7 +168,8 @@ class _EngineBase:
 
     def __init__(self, model: Model, params, *, max_seq: int, chunk: int,
                  tuning_cache=None, batch_sizes=(1, 8), aot="auto",
-                 kv_layout: str = "dense"):
+                 kv_layout: str = "dense",
+                 resilience: Optional[ResilienceConfig] = None):
         if chunk < 1:
             raise ValueError(f"chunk must be >= 1, got {chunk}")
         if kv_layout not in ("dense", "paged"):
@@ -169,6 +182,19 @@ class _EngineBase:
         self.kv_layout = kv_layout
         self.tuning_cache = tuning_cache
         self.tuned: Dict[str, dict] = {}
+        self.resilience = resilience or ResilienceConfig()
+        # chunk-level straggler detection reuses the hardened train-loop
+        # Watchdog (its disarm race is fixed — a chunk finishing just under
+        # the deadline can no longer record a spurious straggler)
+        self._watchdog: Optional[Watchdog] = None
+        if self.resilience.chunk_deadline_s is not None:
+            self._watchdog = Watchdog(self.resilience.chunk_deadline_s,
+                                      on_straggler=self._on_straggler)
+        self._n_chunk_calls = 0
+        self._n_chunk_retries = 0
+        self._n_chunk_quarantines = 0
+        self._n_nan_quarantines = 0
+        self._n_degradations = 0
         # recompile detector: (decode compiles, prefill entries) at the last
         # ``mark_warm()``; None until the engine declares itself warm
         self._jit_baseline = None
@@ -202,9 +228,10 @@ class _EngineBase:
             # write into the pool — the page indirection is paid per chunk,
             # not per token per layer
             view = None if bt is None else model.gather_paged_view(cache, bt)
+            bad0 = jnp.zeros(tokens.shape[:1], bool)
 
             def step(carry, _):
-                tokens, cache, view, pos, keys = carry
+                tokens, cache, view, pos, keys, bad = carry
                 tok = tokens[:, None]
                 if cfg.n_codebooks:
                     tok = jnp.broadcast_to(
@@ -217,23 +244,85 @@ class _EngineBase:
                     logits, cache, view = model.decode_step(
                         params, tok, cache, pos, block_tables=bt,
                         kv_view=view)
+                # NaN guard: a per-slot poison flag, sticky across the scan.
+                # Pure observation — the token dataflow is untouched, so
+                # clean rows stay bitwise-identical with the guard on
+                bad = bad | ~jnp.isfinite(
+                    logits.reshape(logits.shape[0], -1)).all(axis=1)
                 keys, sub = _split_keys(keys)
                 nxt = sample_tokens(logits, sub, temps, top_ks)
                 # clamp: a retired slot keeps decoding until the boundary;
                 # past max_seq its (per-slot-path) cache writes are dropped
                 # (the paged path drops through the block-table sentinel)
                 pos = jnp.minimum(pos + 1, max_seq)
-                return (nxt, cache, view, pos, keys), nxt
+                return (nxt, cache, view, pos, keys, bad), nxt
 
-            (tokens, cache, view, pos, keys), toks = jax.lax.scan(
-                step, (tokens, cache, view, pos, keys), None,
+            (tokens, cache, view, pos, keys, bad), toks = jax.lax.scan(
+                step, (tokens, cache, view, pos, keys, bad0), None,
                 length=self.chunk)
-            return cache, tokens, pos, keys, toks.T  # toks: (b, chunk)
+            return cache, tokens, pos, keys, toks.T, bad  # toks: (b, chunk)
 
         # cache + token/pos/key buffers are donated: decode is copy-free and
         # the engine rebinds the returned buffers each chunk.  ``bt`` (the
         # block tables; None for dense layouts) is tiny and read-only.
         return jax.jit(chunk_fn, donate_argnums=(1, 2, 3, 4))
+
+    def _on_straggler(self, chunk_i: int, dt: float) -> None:
+        obs.counter("serve.stragglers").inc()
+        obs.event("serve.straggler", chunk=chunk_i, elapsed_s=round(dt, 4))
+        log.warning("decode chunk %d exceeded the chunk deadline "
+                    "(%.3fs > %.3fs) — straggler suspected", chunk_i, dt,
+                    self.resilience.chunk_deadline_s)
+
+    @staticmethod
+    def _args_consumed(args) -> bool:
+        """True when any donated buffer in ``args`` was consumed by a
+        failed dispatch — re-invoking would read deleted buffers, so the
+        retry loop must stop and the caller rebuild device state."""
+        for leaf in jax.tree_util.tree_leaves(args):
+            if getattr(leaf, "is_deleted", None) and leaf.is_deleted():
+                return True
+        return False
+
+    def _call_chunk(self, args):
+        """Invoke the fused decode chunk with the resilience wrapping: the
+        ``serve.slow_chunk`` / ``serve.chunk_error`` fault sites, the
+        chunk-level straggler watchdog, and bounded retry-with-backoff for
+        transient failures.
+
+        Retry is only safe while the donated buffers are intact — faults
+        injected here fire *before* dispatch, and a dispatch that died
+        after consuming its donation (:meth:`_args_consumed`) is not
+        retried: the exception propagates and the continuous engine
+        quarantines in-flight work + rebuilds device state."""
+        rc = self.resilience
+        self._n_chunk_calls += 1
+        attempt = 0
+        while True:
+            try:
+                if self._watchdog is not None:
+                    self._watchdog.arm(self._n_chunk_calls)
+                try:
+                    f = faults.should_fire("serve.slow_chunk")
+                    if f is not None:
+                        time.sleep(float(f.value or 0.05))
+                    faults.raise_if("serve.chunk_error")
+                    return self._chunk_fn(*args)
+                finally:
+                    if self._watchdog is not None:
+                        self._watchdog.disarm()
+            except Exception as e:
+                attempt += 1
+                obs.counter("serve.chunk_failures").inc()
+                obs.event("serve.chunk_failure", attempt=attempt,
+                          error=f"{type(e).__name__}: {e}")
+                if attempt > rc.max_chunk_retries or self._args_consumed(args):
+                    raise
+                self._n_chunk_retries += 1
+                log.warning("decode chunk failed (%s: %s); retry %d/%d",
+                            type(e).__name__, e, attempt,
+                            rc.max_chunk_retries)
+                time.sleep(rc.retry_backoff_s * attempt)
 
     # -- prefill: per-bucket AOT executables ---------------------------------
 
@@ -306,6 +395,14 @@ class _EngineBase:
             "prefill_entries": self.prefill_cache_size(),
             "recompiles_after_warm": self._recompiles_after_warm,
             "executor_cache": compiler.executor_cache().stats(),
+            "resilience": {
+                "chunk_retries": self._n_chunk_retries,
+                "chunk_quarantines": self._n_chunk_quarantines,
+                "nan_quarantines": self._n_nan_quarantines,
+                "degradations": self._n_degradations,
+                "stragglers": (len(self._watchdog.events)
+                               if self._watchdog is not None else 0),
+            },
         }
 
     def _jit_sizes(self):
@@ -431,10 +528,10 @@ class BatchedEngine(_EngineBase):
 
     def __init__(self, model: Model, params, max_seq: int = 512,
                  tuning_cache=None, batch_sizes=(1, 8), chunk: int = 8,
-                 aot="auto"):
+                 aot="auto", resilience: Optional[ResilienceConfig] = None):
         super().__init__(model, params, max_seq=max_seq, chunk=chunk,
                          tuning_cache=tuning_cache, batch_sizes=batch_sizes,
-                         aot=aot)
+                         aot=aot, resilience=resilience)
 
     def run(self, requests: List[Request], key=None) -> List[List[int]]:
         with self._options_scope():
@@ -470,8 +567,8 @@ class BatchedEngine(_EngineBase):
         pos = jnp.asarray(lengths, jnp.int32)
         tokens = first
         while any(n > 0 for n in remaining):
-            cache, tokens, pos, keys, toks = self._chunk_fn(
-                self.params, cache, tokens, pos, keys, temps, top_ks, None)
+            cache, tokens, pos, keys, toks, _bad = self._call_chunk(
+                (self.params, cache, tokens, pos, keys, temps, top_ks, None))
             block = np.asarray(toks)          # the chunk's one host sync
             for i in range(b):
                 take = min(remaining[i], block.shape[1])
@@ -524,7 +621,8 @@ class ContinuousEngine(_EngineBase):
                  tuning_cache=None, batch_sizes=None, aot="auto",
                  kv_layout: str = "dense", block_size: int = 16,
                  kv_blocks: Optional[int] = None,
-                 prefill_chunk: Optional[int] = None):
+                 prefill_chunk: Optional[int] = None,
+                 resilience: Optional[ResilienceConfig] = None):
         if kv_layout == "auto":
             from repro import autotune
             kv_layout = autotune.pick_kv_layout(
@@ -543,7 +641,7 @@ class ContinuousEngine(_EngineBase):
         super().__init__(model, params, max_seq=max_seq, chunk=chunk,
                          tuning_cache=tuning_cache,
                          batch_sizes=batch_sizes or (1, slots), aot=aot,
-                         kv_layout=kv_layout)
+                         kv_layout=kv_layout, resilience=resilience)
         self.slots = slots
         limit = (max_seq if prefill_chunk is None
                  else max(min(prefill_chunk, max_seq), min_bucket))
@@ -569,7 +667,14 @@ class ContinuousEngine(_EngineBase):
 
     # -- device state --------------------------------------------------------
 
-    def _reset_state(self) -> None:
+    def _init_device_state(self, park: bool = False) -> None:
+        """(Re)build every device-resident buffer for the CURRENT
+        ``kv_layout`` — factored out of :meth:`_reset_state` so the
+        resilience paths (chunk-failure quarantine, paged->dense
+        degradation) can rebuild device state without discarding the
+        scheduler's pending queue or terminal records.  ``park=True``
+        starts every lane at ``pos == max_seq`` (writes drop) — the safe
+        posture when the rebuild happens mid-traffic."""
         b = self.slots
         if self.kv_layout == "paged":
             from repro.serve.paged import BlockPool
@@ -585,12 +690,12 @@ class ContinuousEngine(_EngineBase):
             self.block_tables = None
             self.pool = None
         self.tokens = jnp.zeros((b,), jnp.int32)
-        self.pos = jnp.zeros((b,), jnp.int32)
+        self.pos = (jnp.full((b,), self.max_seq, jnp.int32) if park
+                    else jnp.zeros((b,), jnp.int32))
         self.keys = jnp.stack(
             [jax.random.PRNGKey(i) for i in range(b)])
         self.temps = jnp.zeros((b,), jnp.float32)
         self.top_ks = jnp.zeros((b,), jnp.int32)
-        self.sched = Scheduler(b, pool=self.pool)
         # immutable zero staging template, reused by every paged admission
         # (never donated): no per-admission init dispatch; dense admissions
         # need no template at all — the fresh-cache prefill executable
@@ -599,6 +704,10 @@ class ContinuousEngine(_EngineBase):
                               if self.kv_layout == "paged" else None)
         self._staging: Dict[int, object] = {}
         self._admit_logits: Dict[int, jax.Array] = {}
+
+    def _reset_state(self) -> None:
+        self._init_device_state()
+        self.sched = Scheduler(self.slots, pool=self.pool)
         self._requests: Dict[int, Request] = {}
         self._stream_keys: Dict[int, jax.Array] = {}
         self._next_id = 0
@@ -638,7 +747,9 @@ class ContinuousEngine(_EngineBase):
         self._stream_keys[rid] = jax.random.fold_in(
             self._run_key, rid if stream is None else stream)
         self.sched.submit(rid, int(request.prompt.shape[0]),
-                          max(int(request.max_new_tokens), 0))
+                          max(int(request.max_new_tokens), 0),
+                          deadline_s=request.deadline_s,
+                          ttft_deadline_s=request.ttft_deadline_s)
         return rid
 
     def take_output(self, rid: int) -> List[int]:
@@ -648,6 +759,25 @@ class ContinuousEngine(_EngineBase):
         prunes every per-request record, so a long-running engine's memory
         is bounded by in-flight + uncollected work, not by total traffic."""
         return self.sched.pop_output(rid)
+
+    def take_result(self, rid: int) -> RequestResult:
+        """Collect (and release) a terminal request's full outcome —
+        tokens + terminal state (``ok|timeout|cancelled|failed``) + reason
+        (:class:`repro.serve.resilience.RequestResult`)."""
+        return self.sched.pop_result(rid)
+
+    def cancel(self, rid: int, reason: str = "cancelled by caller") -> None:
+        """Cancel a pending or in-flight request at the current boundary.
+
+        Partial tokens survive into the terminal result (state
+        ``cancelled``); the device lane is parked and — paged — its pages
+        return to the pool immediately.  Idempotent once terminal;
+        KeyError for ids never submitted."""
+        slot = self.sched.cancel(rid, reason)
+        if slot is not None:
+            self._evict_slot(slot)
+        self._requests.pop(rid, None)
+        self._stream_keys.pop(rid, None)
 
     def run(self, requests: List[Request], key=None) -> List[List[int]]:
         """Serve a closed set of requests to completion (convenience driver
@@ -690,6 +820,22 @@ class ContinuousEngine(_EngineBase):
 
     def _step_chunk_inner(self) -> List[int]:
         finished: List[int] = []
+        # deadline sweep first: an expired request must not consume the
+        # boundary's admission/prefill/decode work
+        for slot, rid in self.sched.check_deadlines():
+            if slot is not None:
+                self._evict_slot(slot)
+            finished.append(rid)
+        # pool integrity: a corrupt block pool means tables may alias pages
+        # across requests — degrade paged -> dense instead of decoding
+        # through a damaged mapping
+        if self.pool is not None and self.resilience.pool_check:
+            if faults.should_fire("serve.pool_corrupt") is not None:
+                faults.corrupt_pool(self.pool)
+            problems = self.pool.validate()
+            if problems:
+                finished.extend(
+                    self._degrade_to_dense("; ".join(problems)))
         self.sched.admissions()               # reserve slots (and KV blocks)
         if self.pool is not None:
             obs.gauge("serve.kv_pool.used_blocks").set(self.pool.used_blocks)
@@ -700,22 +846,186 @@ class ContinuousEngine(_EngineBase):
                     finished.append(rid)
         if self.sched.busy_slots():
             self._before_chunk()              # hook: ShardedEngine pins here
-            with obs.span("serve.decode_chunk", chunk=self.chunk):
-                self.cache, self.tokens, self.pos, self.keys, toks = \
-                    self._chunk_fn(self.params, self.cache, self.tokens,
-                                   self.pos, self.keys, self.temps,
-                                   self.top_ks, self.block_tables)
-                block = np.asarray(toks)      # the chunk's one host sync
-            slot_of = {s.req_id: i for i, s in enumerate(self.sched.slots)
-                       if not s.free}
-            retired = self.sched.record_chunk(block)
-            for rid in retired:
-                self._park_lane(slot_of[rid])
-            finished.extend(retired)
+            try:
+                with obs.span("serve.decode_chunk", chunk=self.chunk):
+                    (self.cache, self.tokens, self.pos, self.keys, toks,
+                     bad) = self._call_chunk(
+                        (self.params, self.cache, self.tokens, self.pos,
+                         self.keys, self.temps, self.top_ks,
+                         self.block_tables))
+                    block = np.asarray(toks)  # the chunk's one host sync
+                    bad_host = np.asarray(bad)
+            except Exception as e:
+                if not self.resilience.quarantine_on_chunk_failure:
+                    raise
+                finished.extend(self._quarantine_chunk_failure(e))
+            else:
+                slot_of = {s.req_id: i
+                           for i, s in enumerate(self.sched.slots)
+                           if not s.free}
+                if self.resilience.nan_guard and bad_host.any():
+                    finished.extend(self._quarantine_nan_rows(bad_host))
+                retired = self.sched.record_chunk(block)
+                for rid in retired:
+                    self._park_lane(slot_of[rid])
+                finished.extend(retired)
         for rid in finished:                  # release prompts/keys at retire
             self._requests.pop(rid, None)
             self._stream_keys.pop(rid, None)
         return finished
+
+    # -- quarantine / degradation paths --------------------------------------
+
+    def _evict_slot(self, slot: int) -> None:
+        """Neutralise a lane whose request terminated outside the normal
+        retire path (cancel/timeout/failure): park it and drop any
+        admission scratch it was holding."""
+        self._park_lane(slot)
+        self._staging.pop(slot, None)
+        self._admit_logits.pop(slot, None)
+
+    def _quarantine_nan_rows(self, bad_host) -> List[int]:
+        """Quarantine slots whose decode chunk produced non-finite logits:
+        the request fails terminally, the lane is parked, and — paged —
+        its pages are scrubbed before returning to the pool (a reissued
+        page must never leak NaNs into the next occupant).  Rows the
+        guard flagged while free/prefilling are stale lanes decoding
+        padding; they are ignored."""
+        out: List[int] = []
+        for i, s in enumerate(self.sched.slots):
+            if not bad_host[i] or s.free or s.prefilling:
+                continue
+            rid = s.req_id
+            self._n_nan_quarantines += 1
+            obs.counter("serve.nan_quarantines").inc()
+            obs.event("serve.nan_quarantine", req_id=rid, slot=i)
+            log.warning("request %d produced non-finite logits in slot %d "
+                        "— quarantined (co-batched requests unaffected)",
+                        rid, i)
+            if self.kv_layout == "paged":
+                self._scrub_pages(self.pool.owned(i))
+            self.sched.fail(rid, "non-finite logits in decode chunk")
+            self._evict_slot(i)
+            out.append(rid)
+        return out
+
+    def _quarantine_chunk_failure(self, e: Exception) -> List[int]:
+        """The decode chunk failed past the retry budget (or consumed its
+        donated buffers): fail every in-flight request and rebuild the
+        device state for the current layout.  Pending requests survive in
+        the queue and admit into the rebuilt state."""
+        self._n_chunk_quarantines += 1
+        obs.counter("serve.chunk_quarantines").inc()
+        obs.event("serve.chunk_quarantine",
+                  error=f"{type(e).__name__}: {e}")
+        log.warning("decode chunk failed past the retry budget (%s: %s); "
+                    "failing in-flight requests and rebuilding device "
+                    "state", type(e).__name__, e)
+        failed = self._fail_in_flight(
+            f"decode chunk failed: {type(e).__name__}: {e}")
+        self._init_device_state(park=True)
+        self.sched.pool = self.pool
+        self._jit_baseline = None   # rebuilt buffers may re-lower; re-warm
+        return failed
+
+    def _fail_in_flight(self, reason: str) -> List[int]:
+        """Fail every admitted request (used when shared device state is
+        suspect); returns their ids.  Queued requests are untouched."""
+        failed: List[int] = []
+        for i, s in enumerate(self.sched.slots):
+            if s.free:
+                continue
+            rid = s.req_id
+            self.sched.fail(rid, reason)
+            self._evict_slot(i)
+            self._requests.pop(rid, None)
+            self._stream_keys.pop(rid, None)
+            failed.append(rid)
+        return failed
+
+    def _degrade_to_dense(self, reason: str) -> List[int]:
+        """The paged->dense rung of the degradation ladder: the block pool
+        failed validation, so the engine abandons the paged layout rather
+        than write through a damaged page mapping.  In-flight requests
+        fail (their pages are suspect); pending requests admit into the
+        rebuilt dense cache; the switch is recorded as an obs provenance
+        Decision with origin ``degraded(paged->dense)``."""
+        self._n_degradations += 1
+        log.warning("KV block pool failed validation (%s); degrading "
+                    "kv_layout paged -> dense", reason)
+        failed = self._fail_in_flight(f"kv pool corrupt: {reason}")
+        record_degradation(
+            "kv_layout", "serve.engine",
+            key=f"serve|kv_layout|slots={self.slots}|max_seq={self.max_seq}",
+            frm="paged", to="dense", layout="dense", note=reason)
+        self.kv_layout = "dense"
+        if not hasattr(self, "_prefill_cont"):
+            # the dense continuation prefill only exists on engines built
+            # dense; a degraded engine needs it from here on
+            model_ = self.model
+            self._prefill_cont = jax.jit(
+                lambda params, tokens, cache, start, lengths:
+                model_.prefill(params, tokens, cache, start=start,
+                               lengths=lengths, attend_cache=True),
+                donate_argnums=(2,))
+        self._init_device_state(park=True)
+        self.sched.pool = None
+        self._jit_baseline = None   # dense chunk/prefill signatures are new
+        return failed
+
+    def _scrub_pages(self, blocks: List[int]) -> None:
+        """Zero the KV pool contents of ``blocks`` before they return to
+        the free list.  Needed because attention's validity masking keeps
+        *weights* at zero but ``0 * NaN`` is NaN — a poisoned page handed
+        to the next request would re-poison it."""
+        if not blocks:
+            return
+        idx = jnp.asarray(sorted(blocks), jnp.int32)
+        kv, state = self.model.split_paged_cache(self.cache)
+        if kv is None:
+            return
+
+        def scrub(leaf):
+            # pool leaves are (layers/groups, n_blocks, block_size, ...)
+            if (leaf.ndim >= 3 and leaf.shape[1] == self.kv_blocks
+                    and jnp.issubdtype(leaf.dtype, jnp.floating)):
+                return leaf.at[:, idx].set(0)
+            return leaf
+        kv = jax.tree_util.tree_map(scrub, kv)
+        self.cache = self.model.merge_paged_cache(kv, state)
+
+    def _poison_slot_cache(self, slot: int) -> None:
+        """Deterministic damage for the ``serve.nan_decode`` drill: fill
+        the slot's cached state with NaN so its next decode chunk trips
+        the in-chunk NaN guard — exactly the flaky-HBM poison model."""
+        if self.kv_layout == "paged":
+            blocks = self.pool.owned(slot)
+            if blocks:
+                idx = jnp.asarray(sorted(blocks), jnp.int32)
+                kv, state = self.model.split_paged_cache(self.cache)
+                if kv is not None:
+                    def poison(leaf):
+                        if (leaf.ndim >= 3
+                                and leaf.shape[1] == self.kv_blocks
+                                and jnp.issubdtype(leaf.dtype,
+                                                   jnp.floating)):
+                            return leaf.at[:, idx].set(jnp.nan)
+                        return leaf
+                    kv = jax.tree_util.tree_map(poison, kv)
+                    self.cache = self.model.merge_paged_cache(kv, state)
+            return
+        small = self.model.init_cache(1, self.max_seq)
+
+        def poison(bl, sl):
+            if not jnp.issubdtype(bl.dtype, jnp.floating):
+                return bl
+            axis = _slot_axis(bl, sl)
+            if axis is None:
+                return jnp.full_like(bl, jnp.nan)
+            idx = [slice(None)] * bl.ndim
+            idx[axis] = slot
+            return bl.at[tuple(idx)].set(jnp.nan)
+        self.cache = jax.tree_util.tree_map(poison, self.cache, small)
 
     def _before_chunk(self) -> None:
         """Hook between boundary admissions and the fused decode chunk —
@@ -788,6 +1098,12 @@ class ContinuousEngine(_EngineBase):
                     self.params, tokens, self._staging[slot],
                     jnp.int32(start), lengths)
             self._staging[slot] = cache1
+        rid = self.sched.slots[slot].req_id
+        if (start + take >= plen
+                and faults.should_fire("serve.nan_prefill",
+                                       req_id=rid) is not None):
+            # poison drill: the request's admission logits read as NaN
+            logits = jnp.full_like(logits, jnp.nan)
         self._admit_logits[slot] = logits
         self.sched.prefill_advance(slot, take)
         return start + take >= plen
@@ -810,6 +1126,21 @@ class ContinuousEngine(_EngineBase):
         length = int(r.prompt.shape[0])
         logits = self._admit_logits.pop(slot)
         staging = self._staging.pop(slot)
+        if (self.resilience.nan_guard
+                and not np.isfinite(np.asarray(logits)).all()):
+            # poisoned prompt: quarantine at admission, before the slot's
+            # state ever joins the shared decode batch
+            self._n_nan_quarantines += 1
+            obs.counter("serve.nan_quarantines").inc()
+            obs.event("serve.nan_quarantine", req_id=rid, slot=slot,
+                      where="prefill")
+            log.warning("request %d produced non-finite prefill logits — "
+                        "quarantined at admission", rid)
+            if self.kv_layout == "paged":
+                self._scrub_pages(self.pool.owned(slot))
+            self.sched.fail(rid, "non-finite prefill logits")
+            self._evict_slot(slot)
+            return True
         if self.kv_layout == "paged":
             if staging is not None:           # recurrent state -> its slot
                 kv, slot_state = self.model.split_paged_cache(self.cache)
@@ -833,6 +1164,10 @@ class ContinuousEngine(_EngineBase):
         done = self.sched.record_first(slot, int(np.asarray(first)[0]))
         if done:
             self._park_lane(slot)
+        elif faults.should_fire("serve.nan_decode", req_id=rid) is not None:
+            # poison drill: NaN the slot's cached state so the next decode
+            # chunk trips the in-chunk NaN guard for this row
+            self._poison_slot_cache(slot)
         return done
 
 
@@ -866,7 +1201,8 @@ class ShardedEngine(ContinuousEngine):
                  mesh=None, mesh_axis: str = "data",
                  kv_layout: str = "dense", block_size: int = 16,
                  kv_blocks: Optional[int] = None,
-                 prefill_chunk: Optional[int] = None):
+                 prefill_chunk: Optional[int] = None,
+                 resilience: Optional[ResilienceConfig] = None):
         from repro.sharding import ctx
         mesh = mesh if mesh is not None else ctx.get_mesh()
         if mesh is None:
@@ -886,7 +1222,8 @@ class ShardedEngine(ContinuousEngine):
                          chunk=chunk, min_bucket=min_bucket,
                          tuning_cache=tuning_cache, batch_sizes=batch_sizes,
                          aot=aot, kv_layout=kv_layout, block_size=block_size,
-                         kv_blocks=kv_blocks, prefill_chunk=prefill_chunk)
+                         kv_blocks=kv_blocks, prefill_chunk=prefill_chunk,
+                         resilience=resilience)
 
     # -- sharded device state ------------------------------------------------
 
@@ -907,8 +1244,11 @@ class ShardedEngine(ContinuousEngine):
         return NamedSharding(
             self.mesh, PS(*([None] * axis + [self.mesh_axis])))
 
-    def _reset_state(self) -> None:
-        super()._reset_state()
+    def _init_device_state(self, park: bool = False) -> None:
+        # the resilience rebuild paths call this too (chunk-failure
+        # quarantine, paged->dense degradation): the rebuilt state must
+        # come back SHARDED, or the next chunk would recompile unsharded
+        super()._init_device_state(park)
         rep, row = self._shardings()
         self.params = jax.device_put(self.params, rep)   # replicate weights
         if self.kv_layout == "paged":

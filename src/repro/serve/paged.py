@@ -102,6 +102,42 @@ class BlockPool:
                 "free": self.free_blocks, "used": self.used_blocks,
                 "owners": len(self._owned)}
 
+    # -- integrity -----------------------------------------------------------
+
+    def validate(self) -> List[str]:
+        """Check the allocator invariants; returns the violations (empty =
+        healthy).  A violated pool means block tables may alias KV pages
+        across requests — the serving engine treats any violation as
+        corruption and degrades paged -> dense rather than keep writing
+        through a damaged mapping.
+
+        Invariants: every block id in range; no id both free and owned; no
+        id owned twice or free twice; free + owned covers exactly the pool.
+        """
+        problems: List[str] = []
+        seen: Dict[int, str] = {}
+        for b in self._free:
+            if not 0 <= b < self.n_blocks:
+                problems.append(f"free list holds out-of-range block {b}")
+            elif b in seen:
+                problems.append(f"block {b} on the free list twice")
+            else:
+                seen[b] = "free"
+        for owner, blocks in self._owned.items():
+            for b in blocks:
+                if not 0 <= b < self.n_blocks:
+                    problems.append(f"owner {owner!r} holds out-of-range "
+                                    f"block {b}")
+                elif b in seen:
+                    problems.append(f"block {b} double-booked "
+                                    f"({seen[b]} and owner {owner!r})")
+                else:
+                    seen[b] = f"owner {owner!r}"
+        if not problems and len(seen) != self.n_blocks:
+            missing = [b for b in range(self.n_blocks) if b not in seen]
+            problems.append(f"blocks neither free nor owned: {missing[:8]}")
+        return problems
+
 
 def table_row(blocks: List[int], max_blocks: int, sentinel: int) -> List[int]:
     """A slot's full ``(max_blocks,)`` table row: its pages in logical

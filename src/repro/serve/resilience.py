@@ -1,0 +1,100 @@
+"""Serving resilience: request terminal states, retry/deadline policy, and
+the degradation-ladder recording shared by the engines.
+
+The serving claim (docs/resilience.md) extends the strategy language's
+"failure as a value" discipline to the runtime: a fault never crashes the
+engine — it moves one request to a terminal non-``ok`` state, or moves the
+*strategy* one rung down a recorded degradation ladder, while co-batched
+clean requests keep streaming bitwise-identical tokens.
+
+This module holds the pieces shared by ``Scheduler`` and the engines:
+
+  * :data:`STATES` / :class:`RequestResult` — the per-request terminal
+    contract surfaced by ``pop_result``/``stats()``;
+  * :class:`ResilienceConfig` — the engine policy knobs (NaN guard, chunk
+    retry budget + backoff, chunk straggler deadline, pool validation);
+  * :func:`record_degradation` — the one way a fallback becomes visible:
+    an obs provenance Decision with origin ``degraded(from->to)``, the
+    always-on ``serve.degradations`` counter, and a structured event.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+from repro import obs
+
+__all__ = ["STATES", "TERMINAL_NON_OK", "RequestResult", "ResilienceConfig",
+           "record_degradation"]
+
+# Per-request terminal states (the request-lifecycle contract):
+#   ok         ran to completion; tokens are the full decode output
+#   timeout    e2e or TTFT deadline expired; tokens are the partial output
+#   cancelled  caller cancelled; tokens are the partial output
+#   failed     quarantined (non-finite logits, repeated chunk failure, or
+#              explicit fail()); tokens are the partial output
+STATES = ("ok", "timeout", "cancelled", "failed")
+TERMINAL_NON_OK = ("timeout", "cancelled", "failed")
+
+
+@dataclasses.dataclass
+class RequestResult:
+    """Terminal outcome of one request: tokens + state + why."""
+    req_id: int
+    tokens: Tuple[int, ...]
+    state: str                  # one of STATES
+    reason: str = ""            # human-readable cause for non-ok states
+
+    @property
+    def ok(self) -> bool:
+        return self.state == "ok"
+
+
+@dataclasses.dataclass(frozen=True)
+class ResilienceConfig:
+    """Engine-level fault policy (defaults are safe for production).
+
+    ``nan_guard``: compute a per-slot non-finite flag inside the decode
+    chunk (one extra all-reduce over logits, no change to the token
+    dataflow) and quarantine poisoned slots at the chunk boundary.
+
+    ``max_chunk_retries`` / ``retry_backoff_s``: transient decode-chunk
+    failures (the executable raised before consuming its donated buffers)
+    are retried with linear backoff; on exhaustion every in-flight request
+    fails and the device state is rebuilt rather than crashing.
+
+    ``chunk_deadline_s``: when set, a chunk exceeding it records a
+    straggler event through the hardened ``ft.resilience.Watchdog``
+    (detection only — the chunk is synchronous, so mitigation is a
+    scheduling concern).
+
+    ``pool_check``: validate the paged ``BlockPool`` free-list invariants
+    each chunk; corruption degrades paged -> dense instead of corrupting
+    cross-request KV state.
+    """
+    nan_guard: bool = True
+    max_chunk_retries: int = 2
+    retry_backoff_s: float = 0.02
+    chunk_deadline_s: Optional[float] = None
+    quarantine_on_chunk_failure: bool = True
+    pool_check: bool = True
+
+
+def record_degradation(kind: str, kernel: str, key: str, frm: str, to: str,
+                       params: Optional[Dict[str, object]] = None,
+                       **kw) -> str:
+    """Record one rung of the degradation ladder; returns the origin string.
+
+    Every fallback in the tree funnels through here (or through
+    ``kernels.ops`` which emits the same triple) so ``obs.explain()``
+    answers *why the strategy changed*: a provenance Decision with origin
+    ``degraded(frm->to)``, the ``serve.degradations`` counter, and an
+    event carrying the cause.  ``kw`` passes through to ``obs.record``
+    (shape/dtype/backend/layout/note/...).
+    """
+    origin = f"degraded({frm}->{to})"
+    obs.record(kind, kernel, key, params or {}, origin, **kw)
+    obs.counter("serve.degradations").inc()
+    obs.event("serve.degraded", kind=kind, kernel=kernel, key=key,
+              origin=origin, note=str(kw.get("note", "")))
+    return origin

@@ -30,9 +30,11 @@ import dataclasses
 import functools
 import time
 from collections import deque
-from typing import Deque, Dict, List, Sequence, Tuple
+from typing import Deque, Dict, List, Optional, Sequence, Tuple
 
 from repro import obs
+from repro.serve.resilience import RequestResult
+from repro.testing import faults
 
 __all__ = ["seq_buckets", "pick_bucket", "Scheduler"]
 
@@ -105,6 +107,13 @@ class Scheduler:
     Outputs accumulate in ``outputs[req_id]``; tokens a slot decodes past
     its request's ``max_new_tokens`` (chunks are fixed-length; requests are
     not) are discarded here and never reach the caller.
+
+    Every request ends in exactly one terminal state
+    (``ok|timeout|cancelled|failed`` — ``repro.serve.resilience.STATES``),
+    recorded in ``done[req_id]`` and surfaced by ``pop_result``; partial
+    tokens survive into the result whatever the state.  ``cancel``/``fail``
+    work on pending AND slotted requests; ``check_deadlines`` sweeps
+    per-request TTFT + e2e deadlines at chunk boundaries.
     """
 
     def __init__(self, n_slots: int, pool=None):
@@ -114,6 +123,7 @@ class Scheduler:
         self.pending: Deque[int] = deque()
         self.meta: Dict[int, dict] = {}
         self.outputs: Dict[int, List[int]] = {}
+        self.done: Dict[int, Tuple[str, str]] = {}  # rid -> (state, reason)
         self.pool = pool  # repro.serve.paged.BlockPool (or None: dense)
         # lifecycle accounting (``stats()`` / ``Engine.stats()``): admits and
         # retires are totals; a *deferral* is one chunk boundary at which the
@@ -121,14 +131,21 @@ class Scheduler:
         self.n_admits = 0
         self.n_retires = 0
         self.n_deferrals = 0
+        self.n_timeouts = 0
+        self.n_cancelled = 0
+        self.n_failed = 0
 
     # -- intake --------------------------------------------------------------
 
-    def submit(self, req_id: int, prompt_len: int, max_new: int) -> None:
-        if req_id in self.meta:
+    def submit(self, req_id: int, prompt_len: int, max_new: int, *,
+               deadline_s: Optional[float] = None,
+               ttft_deadline_s: Optional[float] = None) -> None:
+        if req_id in self.meta or req_id in self.done:
             raise ValueError(f"request id {req_id} already submitted")
         self.meta[req_id] = {"prompt_len": prompt_len, "max_new": max_new,
-                             "t_submit": time.perf_counter()}
+                             "t_submit": time.perf_counter(),
+                             "deadline_s": deadline_s,
+                             "ttft_deadline_s": ttft_deadline_s}
         self.outputs[req_id] = []
         self.pending.append(req_id)
         obs.counter("serve.requests_submitted").inc()
@@ -151,17 +168,21 @@ class Scheduler:
                 continue
             rid = self.pending[0]
             meta = self.meta[rid]
-            if self.pool is not None:
-                need = self.pool.blocks_for(
+            starved = faults.should_fire("serve.pool_exhausted",
+                                         req_id=rid) is not None
+            if self.pool is not None or starved:
+                need = (self.pool.blocks_for(
                     meta["prompt_len"] + meta["max_new"])
-                if not self.pool.can_alloc(need):
+                    if self.pool is not None else 0)
+                if starved or not self.pool.can_alloc(need):
                     # the queue head is block-starved: one deferral per
                     # boundary, however many slots were still free behind it
                     self.n_deferrals += 1
                     obs.counter("serve.admission_deferrals").inc()
                     obs.event("serve.admission_deferred", req_id=rid,
                               need_blocks=need,
-                              free_blocks=self.pool.free_blocks)
+                              free_blocks=(self.pool.free_blocks
+                                           if self.pool is not None else 0))
                     break
                 self.pool.alloc(i, need)
             self.pending.popleft()
@@ -230,7 +251,8 @@ class Scheduler:
                 self._retire(i)
         return finished
 
-    def _retire(self, slot_idx: int) -> None:
+    def _retire(self, slot_idx: int, state: str = "ok",
+                reason: str = "") -> None:
         slot = self.slots[slot_idx]
         rid = slot.req_id
         meta = self.meta.get(rid)
@@ -247,20 +269,110 @@ class Scheduler:
             if t_first is not None and n_tok > 1 and now > t_first:
                 obs.histogram("serve.decode_tok_s").observe(
                     (n_tok - 1) / (now - t_first))
-        obs.event("serve.retire", req_id=rid, slot=slot_idx)
+        obs.event("serve.retire", req_id=rid, slot=slot_idx, state=state)
         slot.req_id = -1
         slot.remaining = 0
         slot.prefill_pos = slot.prefill_len = 0
         if self.pool is not None:
             self.pool.free(slot_idx)  # every page back; tables re-set on
             #                           the next admission, never trusted
+        self._finish(rid, state, reason)
+
+    def _finish(self, rid: int, state: str, reason: str) -> None:
+        """Record a request's terminal state (exactly once per request)."""
+        self.done[rid] = (state, reason)
+        if state == "timeout":
+            self.n_timeouts += 1
+        elif state == "cancelled":
+            self.n_cancelled += 1
+        elif state == "failed":
+            self.n_failed += 1
+        if state != "ok":
+            obs.counter(f"serve.requests_{state}").inc()
+            obs.event("serve.request_terminal", req_id=rid, state=state,
+                      reason=reason)
+
+    def _slot_of(self, rid: int) -> Optional[int]:
+        for i, s in enumerate(self.slots):
+            if s.req_id == rid:
+                return i
+        return None
+
+    def _terminate(self, rid: int, state: str,
+                   reason: str) -> Optional[int]:
+        """Move a live request to a terminal state; returns the slot index
+        it occupied (the engine must park that device lane) or None if it
+        was still pending / already terminal.  KeyError for unknown ids."""
+        if rid in self.done:
+            return None  # already terminal: idempotent
+        if rid not in self.meta:
+            raise KeyError(f"unknown request id {rid}")
+        slot_idx = self._slot_of(rid)
+        if slot_idx is not None:
+            self._retire(slot_idx, state, reason)
+            return slot_idx
+        self.pending.remove(rid)
+        self._finish(rid, state, reason)
+        return None
+
+    def cancel(self, rid: int, reason: str = "cancelled by caller"
+               ) -> Optional[int]:
+        """Cancel a pending or in-flight request (partial tokens kept).
+        Returns the freed slot index when it was occupying a device lane
+        (the engine parks it), else None.  No-op when already terminal."""
+        return self._terminate(rid, "cancelled", reason)
+
+    def fail(self, rid: int, reason: str) -> Optional[int]:
+        """Quarantine a request as ``failed`` (same mechanics as cancel)."""
+        return self._terminate(rid, "failed", reason)
+
+    def check_deadlines(self, now: Optional[float] = None
+                        ) -> List[Tuple[Optional[int], int]]:
+        """Expire requests past their deadlines; returns
+        ``(freed slot or None, req_id)`` per expiry.
+
+        Two clocks per request, both from ``t_submit``: ``ttft_deadline_s``
+        applies until the first token lands (``t_first``), ``deadline_s``
+        applies end-to-end.  Swept at chunk boundaries — the engine cannot
+        observe (or stop) anything mid-chunk, so a deadline is enforced at
+        the first boundary at or after its expiry."""
+        now = time.perf_counter() if now is None else now
+        expired: List[Tuple[str, int]] = []
+        for rid, meta in self.meta.items():
+            if rid in self.done:
+                continue
+            waited = now - meta["t_submit"]
+            dl = meta.get("deadline_s")
+            ttft = meta.get("ttft_deadline_s")
+            if dl is not None and waited >= dl:
+                expired.append(("e2e deadline expired", rid))
+            elif (ttft is not None and "t_first" not in meta
+                  and waited >= ttft):
+                expired.append(("ttft deadline expired", rid))
+        out: List[Tuple[Optional[int], int]] = []
+        for why, rid in expired:
+            out.append((self._terminate(rid, "timeout", why), rid))
+        return out
+
+    def pop_result(self, req_id: int) -> RequestResult:
+        """Collect a terminal request's tokens + state and drop its records
+        — memory stays bounded by in-flight + uncollected work, not total
+        traffic.  KeyError for ids never submitted (or already collected);
+        ValueError while the request is still pending/in-flight."""
+        if req_id not in self.done:
+            if req_id in self.meta:
+                raise ValueError(f"request {req_id} is still in flight")
+            raise KeyError(f"unknown request id {req_id}")
+        state, reason = self.done.pop(req_id)
+        tokens = tuple(self.outputs.pop(req_id, ()))
+        self.meta.pop(req_id, None)
+        return RequestResult(req_id=req_id, tokens=tokens, state=state,
+                             reason=reason)
 
     def pop_output(self, req_id: int) -> List[int]:
-        """Collect a request's tokens and drop its records — memory stays
-        bounded by in-flight + uncollected work, not total traffic."""
-        out = self.outputs.pop(req_id)
-        self.meta.pop(req_id, None)
-        return out
+        """Tokens-only view of :meth:`pop_result` (the pre-resilience API).
+        Raises the same KeyError/ValueError on unknown/in-flight ids."""
+        return list(self.pop_result(req_id).tokens)
 
     # -- state ---------------------------------------------------------------
 
@@ -275,6 +387,9 @@ class Scheduler:
             "admits": self.n_admits,
             "retires": self.n_retires,
             "deferrals": self.n_deferrals,
+            "timeouts": self.n_timeouts,
+            "cancelled": self.n_cancelled,
+            "failed": self.n_failed,
             "pending": len(self.pending),
             "busy": sum(1 for s in self.slots if not s.free),
             "prefilling": sum(1 for s in self.slots if s.prefilling),

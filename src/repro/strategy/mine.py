@@ -19,8 +19,9 @@ from __future__ import annotations
 import dataclasses
 import json
 import os
-import tempfile
 from typing import Dict, Iterable, List, Optional, Sequence, Tuple
+
+from repro.ft import artefacts
 
 from .lang import StrategyTrace
 
@@ -232,34 +233,30 @@ def abstractions_path(cache_path: str) -> str:
 
 
 def save_abstractions(path: str, abstractions: Sequence[Abstraction]) -> str:
+    """Atomic, checksummed write (repro.ft.artefacts) — a torn or
+    bit-flipped abstractions file is detected and quarantined at load."""
     doc = {"version": ABSTRACTIONS_VERSION,
            "abstractions": [a.to_doc() for a in abstractions]}
-    d = os.path.dirname(path) or "."
-    os.makedirs(d, exist_ok=True)
-    fd, tmp = tempfile.mkstemp(dir=d, prefix=".abstractions-", suffix=".json")
-    try:
-        with os.fdopen(fd, "w") as f:
-            json.dump(doc, f, indent=1, sort_keys=True)
-        os.replace(tmp, path)
-    except OSError:
-        try:
-            os.unlink(tmp)
-        except OSError:
-            pass
-        raise
-    return path
+    return artefacts.save_json(path, doc)
 
 
 def load_abstractions(path: str) -> List[Abstraction]:
-    """Read a mined-abstractions file; missing/corrupt files are empty (an
-    abstraction store is a cache, not a source of truth)."""
+    """Read a mined-abstractions file; missing files are empty (an
+    abstraction store is a cache, not a source of truth).  A CORRUPT file
+    — unparseable, checksum-failed, or with malformed records — is
+    quarantined to ``<path>.quarantine/`` and reported (warn-once log +
+    always-on ``artefact.load_failed`` counter) instead of silently read
+    as empty; the next ``mine()``+``save_abstractions`` rebuilds it."""
+    doc = artefacts.load_json(path, what="strategy abstractions")
+    if doc is None:
+        return []
+    if doc.get("version") != ABSTRACTIONS_VERSION:
+        return []  # version skew: expected after an upgrade
     try:
-        with open(path) as f:
-            doc = json.load(f)
-        if not isinstance(doc, dict) or \
-                doc.get("version") != ABSTRACTIONS_VERSION:
-            return []
         return [Abstraction.from_doc(a)
                 for a in doc.get("abstractions", ())]
-    except (OSError, ValueError, KeyError, TypeError):
+    except (ValueError, KeyError, TypeError, AttributeError) as e:
+        artefacts.report_load_failure(
+            path, "strategy abstractions", e,
+            artefacts.quarantine(path))
         return []

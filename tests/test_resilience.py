@@ -1,0 +1,564 @@
+"""Resilience tests: the deterministic fault-injection harness, the
+hardened Watchdog, self-healing artefact stores, the kernel degradation
+ladder, and the serving engines' request-lifecycle robustness (NaN
+quarantine, chunk retry/quarantine, paged->dense degradation, deadlines,
+cancellation) — docs/resilience.md is the contract under test."""
+import json
+import os
+import threading
+import time
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import obs
+from repro.ft import artefacts
+from repro.ft.resilience import Watchdog
+from repro.models.common import ModelConfig
+from repro.models.transformer import Model
+from repro.serve.engine import BatchedEngine, ContinuousEngine, Request
+from repro.serve.paged import BlockPool
+from repro.serve.resilience import STATES, RequestResult, ResilienceConfig
+from repro.testing import faults
+
+
+def tiny_cfg(**kw):
+    base = dict(name="resil-t", family="dense", n_layers=2, d_model=32,
+                n_heads=4, n_kv_heads=2, d_ff=64, vocab=128, dtype="float32",
+                remat=False, max_seq=64)
+    base.update(kw)
+    return ModelConfig(**base)
+
+
+@pytest.fixture(scope="module")
+def dense_model():
+    cfg = tiny_cfg()
+    model = Model(cfg)
+    params = model.init_params(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def make_requests(cfg, n=4, key=None):
+    key = key if key is not None else jax.random.PRNGKey(7)
+    return [Request(
+        prompt=jax.random.randint(jax.random.fold_in(key, 100 + i),
+                                  (5 + 3 * i,), 0, cfg.vocab),
+        max_new_tokens=4 + 3 * i, temperature=0.0) for i in range(n)]
+
+
+@pytest.fixture(scope="module")
+def oracle(dense_model):
+    """Fault-free static-batch outputs: the token-identity reference."""
+    cfg, model, params = dense_model
+    reqs = make_requests(cfg)
+    return BatchedEngine(model, params, max_seq=64, chunk=4).run(
+        reqs, key=jax.random.PRNGKey(7))
+
+
+def drive(eng, reqs, key=None):
+    """submit + step_chunk to idle; returns per-request RequestResults."""
+    with eng._options_scope():
+        eng._run_key = key if key is not None else jax.random.PRNGKey(7)
+        rids = [eng.submit(r, stream=i) for i, r in enumerate(reqs)]
+        while not eng.sched.idle:
+            eng.step_chunk()
+    return [eng.take_result(rid) for rid in rids]
+
+
+def assert_clean_identical(results, oracle_out):
+    for r, want in zip(results, oracle_out):
+        if r.state == "ok":
+            assert list(r.tokens) == want, f"clean request {r.req_id} diverged"
+
+
+# ---------------------------------------------------------------------------
+# the fault plan itself
+# ---------------------------------------------------------------------------
+
+class TestFaultPlan:
+    def test_spec_grammar(self):
+        plan = faults.parse_spec(
+            "serve.nan_prefill(req_id=3); executor.build(key=*pallas*, "
+            "times=2, after=1); serve.slow_chunk(value=0.25); x(times=-1)")
+        assert [f.site for f in plan] == [
+            "serve.nan_prefill", "executor.build", "serve.slow_chunk", "x"]
+        assert plan[0].match == {"req_id": "3"}
+        assert plan[1].times == 2 and plan[1].after == 1
+        assert plan[1].match == {"key": "*pallas*"}
+        assert plan[2].value == 0.25
+        assert plan[3].times == -1
+
+    def test_spec_rejects_malformed(self):
+        with pytest.raises(ValueError):
+            faults.parse_spec("site(unclosed")
+        with pytest.raises(ValueError):
+            faults.parse_spec("site(keyvalue)")
+        with pytest.raises(ValueError):
+            faults.parse_spec("(x=1)")
+
+    def test_after_times_schedule(self):
+        with faults.inject("s(after=1, times=2)") as plan:
+            hits = [faults.should_fire("s") is not None for _ in range(5)]
+        assert hits == [False, True, True, False, False]
+        assert plan[0].fired == 2 and plan[0].seen == 5
+
+    def test_ctx_match_is_fnmatch(self):
+        with faults.inject("s(k=*abc*, times=-1)"):
+            assert faults.should_fire("s", k="xxabcyy") is not None
+            assert faults.should_fire("s", k="nope") is None
+            assert faults.should_fire("s") is None  # missing key: no match
+
+    def test_inactive_is_none_and_cheap(self):
+        assert not faults.active()
+        assert faults.should_fire("anything", k=1) is None
+
+    def test_nested_plans_both_consulted(self):
+        with faults.inject("a"):
+            with faults.inject("b") as inner:
+                assert faults.should_fire("b") is not None
+                assert faults.should_fire("a") is not None
+            assert inner[0].fired == 1
+            assert faults.should_fire("b") is None  # inner scope gone
+
+    def test_env_var_plan(self, monkeypatch):
+        monkeypatch.setenv(faults.ENV_VAR, "envsite(times=1)")
+        assert faults.active()
+        assert faults.should_fire("envsite") is not None
+        assert faults.should_fire("envsite") is None  # times exhausted
+        monkeypatch.delenv(faults.ENV_VAR)
+        assert not faults.active()
+
+    def test_raise_if(self):
+        with faults.inject("boom"):
+            with pytest.raises(faults.InjectedFault):
+                faults.raise_if("boom")
+        faults.raise_if("boom")  # inactive: no-op
+
+
+# ---------------------------------------------------------------------------
+# Watchdog: the disarm race regression
+# ---------------------------------------------------------------------------
+
+class TestWatchdog:
+    def test_disarm_race_no_spurious_straggler(self):
+        """Regression: ``Timer.cancel()`` cannot stop a callback that has
+        already started, so a step finishing *at* the deadline could record
+        a straggler after ``disarm()``.  The generation token must make a
+        post-disarm ``_fire`` a no-op — simulated deterministically by
+        invoking the stale callback by hand."""
+        w = Watchdog(deadline_s=60.0, on_straggler=lambda s, d: None)
+        w.arm(step=1)
+        stale_gen = w._gen
+        w.disarm()
+        w._fire(stale_gen)          # the raced callback arriving late
+        assert w.events == []
+
+    def test_rearm_invalidates_older_generation(self):
+        w = Watchdog(deadline_s=60.0, on_straggler=lambda s, d: None)
+        w.arm(step=1)
+        gen1 = w._gen
+        w.arm(step=2)               # re-arm without disarm (next chunk)
+        w._fire(gen1)               # step-1 timer firing late
+        assert w.events == []
+        w._fire(w._gen)             # the live generation may fire...
+        assert [s for s, _ in w.events] == [2]
+        w._fire(w._gen)             # ...but only once
+        assert len(w.events) == 1
+
+    def test_real_timer_still_fires_on_breach(self):
+        fired = threading.Event()
+        w = Watchdog(deadline_s=0.02, on_straggler=lambda s, d: fired.set())
+        w.arm(step=7)
+        assert fired.wait(timeout=2.0)
+        w.disarm()
+        assert [s for s, _ in w.events] == [7]
+
+
+# ---------------------------------------------------------------------------
+# self-healing artefact stores
+# ---------------------------------------------------------------------------
+
+class TestArtefacts:
+    def test_roundtrip_checksummed(self, tmp_path):
+        p = str(tmp_path / "a.json")
+        artefacts.save_json(p, {"version": 1, "entries": {"k": [1, 2]}})
+        raw = json.load(open(p))
+        assert raw["checksum"].startswith("sha256:")
+        assert artefacts.load_json(p) == {"version": 1,
+                                          "entries": {"k": [1, 2]}}
+
+    def test_missing_is_silent_none(self, tmp_path):
+        before = obs.counter("artefact.load_failed").value
+        assert artefacts.load_json(str(tmp_path / "absent.json")) is None
+        assert obs.counter("artefact.load_failed").value == before
+
+    @pytest.mark.parametrize("mode", ["garbage", "truncate", "stale"])
+    def test_corrupt_file_quarantined_and_reported(self, tmp_path, mode):
+        p = str(tmp_path / "a.json")
+        artefacts.save_json(p, {"version": 1, "x": mode})
+        faults.corrupt_json_file(p, mode)
+        before = obs.counter("artefact.load_failed").value
+        assert artefacts.load_json(p, what="test store") is None
+        assert obs.counter("artefact.load_failed").value == before + 1
+        assert not os.path.exists(p)
+        qdir = p + ".quarantine"
+        assert os.path.isdir(qdir) and os.listdir(qdir)
+
+    def test_legacy_file_without_checksum_loads(self, tmp_path):
+        p = str(tmp_path / "legacy.json")
+        with open(p, "w") as f:
+            json.dump({"version": 1, "old": True}, f)
+        assert artefacts.load_json(p) == {"version": 1, "old": True}
+
+    def test_injected_corruption_site(self, tmp_path):
+        p = str(tmp_path / "a.json")
+        artefacts.save_json(p, {"version": 1})
+        with faults.inject("artefact.corrupt(what=drill*)"):
+            assert artefacts.load_json(p, what="drill target") is None
+        assert not os.path.exists(p)  # quarantined like real corruption
+
+
+class TestTuningCacheSelfHeal:
+    def test_corrupt_file_heals_and_rebuilds(self, tmp_path):
+        from repro.autotune.cache import TuningCache
+        p = str(tmp_path / "tune.json")
+        c = TuningCache(p)
+        c.put("k1", {"kernel": "dot", "params": {"block": 4}})
+        faults.corrupt_json_file(p, "garbage")
+        c2 = TuningCache(p)
+        assert c2.get("k1") is None          # lost, but load did not crash
+        assert os.path.isdir(p + ".quarantine")
+        c2.put("k1", {"kernel": "dot", "params": {"block": 8}})
+        assert TuningCache(p).get("k1")["params"]["block"] == 8
+
+    def test_corrupt_entry_quarantined_healthy_kept(self, tmp_path):
+        from repro.autotune.cache import TuningCache
+        p = str(tmp_path / "tune.json")
+        c = TuningCache(p)
+        c.put("good", {"kernel": "dot", "params": {"block": 4}})
+        c.put("bad", {"kernel": "dot", "params": {"block": 8}})
+        raw = json.load(open(p))
+        raw.pop("checksum", None)            # entry damage, not file damage
+        raw["entries"]["bad"] = "not-a-record"
+        with open(p, "w") as f:
+            json.dump(raw, f)
+        before = obs.counter("artefact.entry_quarantined").value
+        c2 = TuningCache(p)
+        assert c2.get("good")["params"]["block"] == 4
+        assert c2.get("bad") is None
+        assert obs.counter("artefact.entry_quarantined").value == before + 1
+        assert os.path.isdir(p + ".quarantine")
+
+    def test_corrupt_entry_rebuilt_by_next_tune(self, tmp_path):
+        """The acceptance drill: corrupt one tuning-cache entry, observe the
+        quarantine, then run ``tune()`` for that kernel/shape and see the
+        entry rebuilt on disk."""
+        from repro import autotune
+        from repro.autotune.cache import TuningCache, make_key
+        p = str(tmp_path / "tune.json")
+        cache = TuningCache(p)
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore")
+            autotune.tune("dot", cache=cache, measure=False, n=64)
+        key = make_key("dot", {"n": 64})
+        assert cache.get(key) is not None
+        raw = json.load(open(p))
+        raw.pop("checksum", None)
+        raw["entries"][key] = 17             # corrupt THE entry
+        with open(p, "w") as f:
+            json.dump(raw, f)
+        fresh = TuningCache(p)
+        assert fresh.get(key) is None        # quarantined on load
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore")
+            autotune.tune("dot", cache=fresh, measure=False, n=64)
+        assert fresh.get(key) is not None    # rebuilt in memory...
+        assert TuningCache(p).get(key) is not None  # ...and on disk
+
+
+class TestAOTSelfHeal:
+    def test_corrupt_aot_program_quarantined_others_load(self, tmp_path):
+        from repro import compiler
+        from repro.kernels import ops
+        store = compiler.executor_cache()
+        ops.clear_caches()
+        for n in (32, 48):                   # stage two executors
+            x = jnp.arange(n, dtype=jnp.float32)
+            ops.dot(x, x, impl="dpia-jnp")
+        d = str(tmp_path / "aot")
+        assert store.save_aot(d) >= 2
+        files = [f for f in os.listdir(d) if f.endswith(".json")]
+        faults.corrupt_json_file(os.path.join(d, files[0]), "garbage")
+        store.clear()
+        before = obs.counter("artefact.load_failed").value
+        loaded = store.load_aot(d)           # must not raise
+        assert loaded == len(files) - 1
+        assert obs.counter("artefact.load_failed").value == before + 1
+        assert os.path.isdir(os.path.join(d, ".quarantine"))
+        ops.clear_caches()
+
+
+# ---------------------------------------------------------------------------
+# the kernel degradation ladder
+# ---------------------------------------------------------------------------
+
+class TestKernelLadder:
+    def test_tuned_to_default_to_jnp_and_recovery(self):
+        from repro.kernels import ops
+        x = jnp.arange(64, dtype=jnp.float32)
+        y = jnp.arange(64, dtype=jnp.float32) * 0.5
+        ref = np.asarray(ops.dot(x, y, impl="xla"))
+        ops.clear_caches()
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore", RuntimeWarning)
+            with faults.inject(
+                    "executor.build(key=dot*|pallas|*, times=-1)") as plan:
+                out = ops.dot(x, y, impl="dpia-pallas")
+        assert plan[0].fired >= 2            # tuned build AND default build
+        assert np.allclose(np.asarray(out), ref)
+        origins = {d.origin for d in obs.decisions()
+                   if d.kernel == "dot" and d.origin.startswith("degraded(")}
+        assert "degraded(tuned->default)" in origins
+        assert "degraded(pallas->jnp)" in origins
+        # recovery: with the fault gone, the pallas executor builds again
+        ops.clear_caches()
+        out2 = ops.dot(x, y, impl="dpia-pallas")
+        assert np.allclose(np.asarray(out2), ref)
+
+    def test_jnp_rung_has_no_floor(self):
+        from repro.kernels import ops
+        x = jnp.arange(64, dtype=jnp.float32)
+        ops.clear_caches()
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore", RuntimeWarning)
+            with faults.inject("executor.build(key=dot*|jnp|*, times=-1)"):
+                with pytest.raises(faults.InjectedFault):
+                    ops.dot(x, x, impl="dpia-jnp")
+        ops.clear_caches()
+
+
+# ---------------------------------------------------------------------------
+# engine request-lifecycle robustness
+# ---------------------------------------------------------------------------
+
+class TestEngineNaNQuarantine:
+    def test_nan_prefill_quarantined_cobatch_identical(self, dense_model,
+                                                       oracle):
+        cfg, model, params = dense_model
+        eng = ContinuousEngine(model, params, max_seq=64, slots=2, chunk=4,
+                               min_bucket=8)
+        with faults.inject("serve.nan_prefill(req_id=1)"):
+            results = drive(eng, make_requests(cfg))
+        assert [r.state for r in results] == ["ok", "failed", "ok", "ok"]
+        assert "non-finite" in results[1].reason
+        assert_clean_identical(results, oracle)
+        assert eng.stats()["resilience"]["nan_quarantines"] == 1
+
+    def test_nan_decode_quarantined_cobatch_identical(self, dense_model,
+                                                      oracle):
+        cfg, model, params = dense_model
+        eng = ContinuousEngine(model, params, max_seq=64, slots=2, chunk=4,
+                               min_bucket=8)
+        with faults.inject("serve.nan_decode(req_id=2)"):
+            results = drive(eng, make_requests(cfg))
+        assert results[2].state == "failed"
+        assert [results[i].state for i in (0, 1, 3)] == ["ok"] * 3
+        assert_clean_identical(results, oracle)
+
+    def test_paged_nan_pages_scrubbed_before_reuse(self, dense_model,
+                                                   oracle):
+        """A quarantined slot's pages go back to the pool; 0*NaN == NaN, so
+        unless they are scrubbed the next occupant of those pages is
+        re-poisoned.  With a tight pool the later requests MUST reuse the
+        poisoned request's pages — and must stay token-identical."""
+        cfg, model, params = dense_model
+        eng = ContinuousEngine(model, params, max_seq=64, slots=2, chunk=4,
+                               min_bucket=8, kv_layout="paged",
+                               block_size=16, kv_blocks=8)
+        with faults.inject("serve.nan_decode(req_id=0)"):
+            results = drive(eng, make_requests(cfg))
+        assert results[0].state == "failed"
+        assert_clean_identical(results, oracle)
+        assert all(results[i].state == "ok" for i in (1, 2, 3))
+
+    def test_nan_guard_off_is_honoured(self, dense_model):
+        cfg, model, params = dense_model
+        eng = ContinuousEngine(model, params, max_seq=64, slots=2, chunk=4,
+                               min_bucket=8,
+                               resilience=ResilienceConfig(nan_guard=False))
+        with faults.inject("serve.nan_decode(req_id=0)"):
+            results = drive(eng, make_requests(cfg, n=2))
+        # no quarantine: the poisoned request runs to completion (its
+        # tokens are garbage, but the guard was explicitly disabled)
+        assert [r.state for r in results] == ["ok", "ok"]
+        assert eng.stats()["resilience"]["nan_quarantines"] == 0
+
+
+class TestEngineChunkFailures:
+    def test_transient_chunk_error_retried_token_identical(self, dense_model,
+                                                           oracle):
+        cfg, model, params = dense_model
+        eng = ContinuousEngine(
+            model, params, max_seq=64, slots=2, chunk=4, min_bucket=8,
+            resilience=ResilienceConfig(retry_backoff_s=0.001))
+        with faults.inject("serve.chunk_error(times=2)"):
+            got = eng.run(make_requests(cfg), key=jax.random.PRNGKey(7))
+        assert got == oracle
+        assert eng.stats()["resilience"]["chunk_retries"] == 2
+
+    def test_retry_exhaustion_quarantines_and_engine_continues(
+            self, dense_model, oracle):
+        cfg, model, params = dense_model
+        eng = ContinuousEngine(
+            model, params, max_seq=64, slots=2, chunk=4, min_bucket=8,
+            resilience=ResilienceConfig(max_chunk_retries=1,
+                                        retry_backoff_s=0.001))
+        with faults.inject("serve.chunk_error(times=3)"):
+            results = drive(eng, make_requests(cfg))
+        states = [r.state for r in results]
+        assert "failed" in states            # in-flight work quarantined
+        assert "ok" in states                # pending work still served
+        assert_clean_identical(results, oracle)
+        rs = eng.stats()["resilience"]
+        assert rs["chunk_quarantines"] == 1
+
+    def test_quarantine_off_propagates(self, dense_model):
+        cfg, model, params = dense_model
+        eng = ContinuousEngine(
+            model, params, max_seq=64, slots=2, chunk=4, min_bucket=8,
+            resilience=ResilienceConfig(max_chunk_retries=0,
+                                        quarantine_on_chunk_failure=False))
+        with faults.inject("serve.chunk_error(times=-1)"):
+            with pytest.raises(faults.InjectedFault):
+                eng.run(make_requests(cfg, n=1), key=jax.random.PRNGKey(7))
+
+    def test_slow_chunk_straggler_detected(self, dense_model, oracle):
+        cfg, model, params = dense_model
+        eng = ContinuousEngine(
+            model, params, max_seq=64, slots=2, chunk=4, min_bucket=8,
+            resilience=ResilienceConfig(chunk_deadline_s=0.05))
+        with faults.inject("serve.slow_chunk(times=1, value=0.2)"):
+            got = eng.run(make_requests(cfg), key=jax.random.PRNGKey(7))
+        assert got == oracle                 # detection never alters tokens
+        assert eng.stats()["resilience"]["stragglers"] >= 1
+
+
+class TestEngineDegradation:
+    def test_pool_corruption_degrades_paged_to_dense(self, dense_model,
+                                                     oracle):
+        cfg, model, params = dense_model
+        eng = ContinuousEngine(model, params, max_seq=64, slots=2, chunk=4,
+                               min_bucket=8, kv_layout="paged",
+                               block_size=16)
+        with faults.inject("serve.pool_corrupt(after=1)"):
+            results = drive(eng, make_requests(cfg))
+        assert eng.kv_layout == "dense"
+        assert eng.pool is None and eng.sched.pool is None
+        assert any(r.state == "failed" for r in results)
+        assert any(r.state == "ok" for r in results)
+        assert_clean_identical(results, oracle)  # dense rung: same tokens
+        decs = [d for d in obs.decisions()
+                if d.origin == "degraded(paged->dense)"]
+        assert decs and decs[-1].kind == "kv_layout"
+        assert eng.stats()["resilience"]["degradations"] >= 1
+
+    def test_pool_exhaustion_defers_never_drops(self, dense_model, oracle):
+        cfg, model, params = dense_model
+        eng = ContinuousEngine(model, params, max_seq=64, slots=2, chunk=4,
+                               min_bucket=8, kv_layout="paged",
+                               block_size=16)
+        with faults.inject("serve.pool_exhausted(req_id=0)"):
+            got = eng.run(make_requests(cfg), key=jax.random.PRNGKey(7))
+        assert got == oracle                 # deferred, served, identical
+        assert eng.sched.n_deferrals >= 1
+
+    def test_block_pool_validate(self):
+        pool = BlockPool(8, 16)
+        assert pool.validate() == []
+        pool.alloc(0, 3)
+        assert pool.validate() == []
+        msg = faults.corrupt_pool(pool)
+        assert pool.validate(), msg
+
+
+class TestEngineDeadlinesAndCancel:
+    def test_deadlines_expire_at_chunk_boundary(self, dense_model):
+        cfg, model, params = dense_model
+        eng = ContinuousEngine(model, params, max_seq=64, slots=2, chunk=4,
+                               min_bucket=8)
+        key = jax.random.PRNGKey(7)
+        base = make_requests(cfg)
+        reqs = [
+            Request(prompt=base[0].prompt, max_new_tokens=4, deadline_s=0.0),
+            Request(prompt=base[1].prompt, max_new_tokens=4,
+                    ttft_deadline_s=0.0),
+            Request(prompt=base[2].prompt, max_new_tokens=8),
+        ]
+        results = drive(eng, reqs, key=key)
+        assert results[0].state == "timeout"
+        assert "e2e" in results[0].reason
+        assert results[1].state == "timeout"
+        assert "ttft" in results[1].reason
+        assert results[2].state == "ok"
+        assert eng.sched.stats()["timeouts"] == 2
+
+    def test_cancel_pending_and_in_flight(self, dense_model, oracle):
+        cfg, model, params = dense_model
+        eng = ContinuousEngine(model, params, max_seq=64, slots=2, chunk=4,
+                               min_bucket=8)
+        reqs = make_requests(cfg)
+        with eng._options_scope():
+            eng._run_key = jax.random.PRNGKey(7)
+            rids = [eng.submit(r, stream=i) for i, r in enumerate(reqs)]
+            eng.cancel(rids[3])              # still pending: zero tokens
+            eng.step_chunk()                 # admits 0,1; req 1 survives
+            eng.cancel(rids[1])              # in flight: partial tokens
+            while not eng.sched.idle:
+                eng.step_chunk()
+        results = [eng.take_result(rid) for rid in rids]
+        assert results[3].state == "cancelled" and results[3].tokens == ()
+        assert results[1].state == "cancelled" and results[1].tokens
+        assert list(results[1].tokens) == oracle[1][:len(results[1].tokens)]
+        assert results[0].state == "ok" and list(results[0].tokens) == oracle[0]
+        assert results[2].state == "ok" and list(results[2].tokens) == oracle[2]
+
+    def test_cancel_unknown_raises_terminal_idempotent(self, dense_model):
+        cfg, model, params = dense_model
+        eng = ContinuousEngine(model, params, max_seq=64, slots=1, chunk=4,
+                               min_bucket=8)
+        with pytest.raises(KeyError):
+            eng.cancel(999)
+        results = drive(eng, make_requests(cfg, n=1))
+        assert results[0].state == "ok"
+
+    def test_take_result_surfaces_state_and_reason(self, dense_model):
+        cfg, model, params = dense_model
+        eng = ContinuousEngine(model, params, max_seq=64, slots=1, chunk=4,
+                               min_bucket=8)
+        with eng._options_scope():
+            eng._run_key = jax.random.PRNGKey(7)
+            rid = eng.submit(make_requests(cfg, n=1)[0])
+            eng.cancel(rid, "load shedding")
+        res = eng.take_result(rid)
+        assert isinstance(res, RequestResult)
+        assert res.state in STATES and not res.ok
+        assert res.reason == "load shedding"
+        with pytest.raises(KeyError):        # collected: records released
+            eng.take_result(rid)
+
+
+class TestEnvDrivenFaultPlan:
+    def test_engine_honours_repro_faults_env(self, dense_model, oracle,
+                                             monkeypatch):
+        """The CI/bench activation path: same schedule, no code."""
+        cfg, model, params = dense_model
+        monkeypatch.setenv(faults.ENV_VAR, "serve.nan_prefill(req_id=1)")
+        eng = ContinuousEngine(model, params, max_seq=64, slots=2, chunk=4,
+                               min_bucket=8)
+        results = drive(eng, make_requests(cfg))
+        monkeypatch.delenv(faults.ENV_VAR)
+        assert [r.state for r in results] == ["ok", "failed", "ok", "ok"]
+        assert_clean_identical(results, oracle)

@@ -457,3 +457,87 @@ class TestRecurrentPaddingInvariance:
         cont = ContinuousEngine(model, params, max_seq=64, slots=2, chunk=4,
                                 min_bucket=4)
         assert static.run(reqs(), key=key) == cont.run(reqs(), key=key)
+
+
+# ---------------------------------------------------------------------------
+# request-lifecycle edges (PR 8: tests/test_resilience.py has the fault
+# drills; these are the plain state-machine corners)
+# ---------------------------------------------------------------------------
+
+class TestLifecycleEdges:
+    def test_submit_max_new_zero_retires_ok_empty(self, dense_model):
+        """A zero-budget request is legal: it admits, prefills, and retires
+        ``ok`` with no tokens — never wedging its slot."""
+        cfg, model, params = dense_model
+        eng = ContinuousEngine(model, params, max_seq=64, slots=2, chunk=4,
+                               min_bucket=8)
+        reqs = [Request(prompt=jnp.arange(5) % cfg.vocab, max_new_tokens=0),
+                Request(prompt=jnp.arange(7) % cfg.vocab, max_new_tokens=6)]
+        out = eng.run(reqs, key=jax.random.PRNGKey(1))
+        assert out[0] == []
+        assert len(out[1]) == 6
+        assert eng.sched.stats()["retires"] == 2
+
+    def test_duplicate_req_id_rejected(self):
+        sched = Scheduler(2)
+        sched.submit(7, prompt_len=4, max_new=4)
+        with pytest.raises(ValueError, match="already submitted"):
+            sched.submit(7, prompt_len=4, max_new=4)
+        # terminal ids stay reserved until collected, too
+        sched.cancel(7)
+        with pytest.raises(ValueError, match="already submitted"):
+            sched.submit(7, prompt_len=4, max_new=4)
+
+    def test_pop_output_unknown_in_flight_and_failed(self):
+        sched = Scheduler(1)
+        with pytest.raises(KeyError):
+            sched.pop_output(42)
+        sched.submit(1, prompt_len=4, max_new=4)
+        with pytest.raises(ValueError, match="in flight"):
+            sched.pop_output(1)
+        sched.fail(1, "drill")
+        assert sched.pop_output(1) == []     # failed: partial tokens (none)
+        with pytest.raises(KeyError):        # collected: records released
+            sched.pop_output(1)
+
+    def test_cancel_while_prefilling(self, dense_model):
+        """Cancel mid-chunked-prefill: the slot is released with the prompt
+        only partially in the cache, and later requests admit cleanly."""
+        cfg, model, params = dense_model
+        eng = ContinuousEngine(model, params, max_seq=64, slots=1, chunk=4,
+                               min_bucket=8, prefill_chunk=8)
+        long_req = Request(prompt=jnp.arange(20) % cfg.vocab,
+                           max_new_tokens=4)
+        short = Request(prompt=jnp.arange(5) % cfg.vocab, max_new_tokens=4)
+        solo = eng.run([short], key=jax.random.PRNGKey(2))[0]
+        with eng._options_scope():
+            eng._run_key = jax.random.PRNGKey(2)
+            rid_long = eng.submit(long_req)
+            eng.step_chunk()                     # prefills 8 of 20 tokens
+            assert eng.sched.slots[0].prefilling
+            eng.cancel(rid_long)
+            assert eng.sched.slots[0].free
+            rid_short = eng.submit(short, stream=0)
+            while not eng.sched.idle:
+                eng.step_chunk()
+        res_long = eng.take_result(rid_long)
+        assert res_long.state == "cancelled" and res_long.tokens == ()
+        assert list(eng.take_result(rid_short).tokens) == solo
+
+    def test_deadline_expiry_at_chunk_boundary(self):
+        """Deadlines are swept at boundaries: an expiry mid-chunk takes
+        effect at the NEXT sweep, with partial tokens kept (scheduler-level
+        and deterministic via the ``now`` override)."""
+        sched = Scheduler(1)
+        sched.submit(1, prompt_len=4, max_new=8, deadline_s=10.0)
+        sched.admissions()
+        sched.record_first(0, 5)
+        t_submit = sched.meta[1]["t_submit"]
+        assert sched.check_deadlines(now=t_submit + 9.0) == []
+        out = sched.check_deadlines(now=t_submit + 10.0)
+        assert out == [(0, 1)]               # freed slot 0, request 1
+        assert sched.slots[0].free
+        res = sched.pop_result(1)
+        assert res.state == "timeout" and list(res.tokens) == [5]
+        # the sweep is idempotent: nothing left to expire
+        assert sched.check_deadlines(now=t_submit + 11.0) == []
