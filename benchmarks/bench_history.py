@@ -1,0 +1,143 @@
+"""Append headline bench metrics to a committed history file.
+
+The serve and resilience benches each write a full snapshot
+(``BENCH_serve.json``, ``BENCH_resilience.json``) that is overwritten on
+every run — good for "what is the current number", useless for "when did
+it regress".  This tool distils the handful of headline metrics worth
+tracking over time — decode throughput, recompiles after warm-up, drift
+audit firings, resilience outcomes — into one compact entry and appends
+it to ``BENCH_history.json``, which IS committed, so the repo's own git
+log doubles as a perf/regression timeline.
+
+Entry shape (validated by ``validate_trace.py --history``)::
+
+    {"t": "2026-08-08T12:00:00Z",          # UTC ISO timestamp
+     "serve": {"fused_tok_s": ..., "continuous_tok_s": ...},
+     "recompiles": 0,                      # decode recompiles after warm
+     "drift": 0,                           # tune.drift firings observed
+     "resilience": {"faults_injected": ..., "clean_identical": ...,
+                    "flight_dumps": ...},
+     "note": "..."}                        # optional, e.g. the git sha
+
+Usage:
+  PYTHONPATH=src python benchmarks/bench_history.py \
+      [--serve BENCH_serve.json] [--resilience BENCH_resilience.json] \
+      [--out BENCH_history.json] [--note TEXT]
+
+Missing input files are skipped (their sections stay empty/zero) so the
+tool works in CI legs that only ran one bench.  History is capped at the
+most recent ``--keep`` entries (default 200).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+__all__ = ["headline_entry", "append_history", "main"]
+
+
+def _load(path):
+    if not path or not os.path.exists(path):
+        return None
+    try:
+        with open(path) as f:
+            return json.load(f)
+    except (OSError, ValueError):
+        return None
+
+
+def _metric_value(doc, name, default=0.0):
+    """A counter/gauge value out of a bench doc's embedded metrics snapshot."""
+    m = (doc or {}).get("metrics") or {}
+    entry = m.get(name)
+    if isinstance(entry, dict) and isinstance(entry.get("value"), (int, float)):
+        return float(entry["value"])
+    return float(default)
+
+
+def headline_entry(serve_doc=None, resil_doc=None, note="", t=None):
+    """Distil the bench docs into one history entry (see module docstring)."""
+    serve = {}
+    recompiles = 0.0
+    if serve_doc:
+        dec = serve_doc.get("decode") or {}
+        for src, dst in (("fused_tok_s", "fused_tok_s"),
+                         ("continuous_tok_s_end_to_end", "continuous_tok_s"),
+                         ("speedup_fused_vs_legacy", "speedup_fused")):
+            v = dec.get(src)
+            if isinstance(v, (int, float)):
+                serve[dst] = round(float(v), 3)
+        rc = serve_doc.get("recompiles") or {}
+        v = rc.get("decode_recompiles_after_warmup")
+        if isinstance(v, (int, float)):
+            recompiles = float(v)
+
+    # drift firings: whichever doc carried the tune.drift counter, summed —
+    # the counter is per-process, so the docs never double-count one run
+    drift = (_metric_value(serve_doc, "tune.drift")
+             + _metric_value(resil_doc, "tune.drift"))
+
+    resilience = {}
+    if resil_doc:
+        for k in ("faults_injected", "clean_identical", "degradations"):
+            v = resil_doc.get(k)
+            if isinstance(v, (int, float)):
+                resilience[k] = float(v)
+        fl = resil_doc.get("flight") or {}
+        if isinstance(fl.get("dumps"), (int, float)):
+            resilience["flight_dumps"] = float(fl["dumps"])
+
+    entry = {
+        "t": t or time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime()),
+        "serve": serve,
+        "recompiles": recompiles,
+        "drift": drift,
+        "resilience": resilience,
+    }
+    if note:
+        entry["note"] = note
+    return entry
+
+
+def append_history(path, entry, keep=200):
+    """Append ``entry`` to the JSON list at ``path`` (created if missing);
+    returns the new history.  The file is rewritten whole — it is small by
+    construction (``keep`` compact entries)."""
+    hist = _load(path)
+    if not isinstance(hist, list):
+        hist = []
+    hist.append(entry)
+    hist = hist[-keep:]
+    with open(path, "w") as f:
+        json.dump(hist, f, indent=1, sort_keys=True)
+        f.write("\n")
+    return hist
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--serve", default="BENCH_serve.json")
+    ap.add_argument("--resilience", default="BENCH_resilience.json")
+    ap.add_argument("--out", default="BENCH_history.json")
+    ap.add_argument("--note", default="", help="free-form tag (e.g. git sha)")
+    ap.add_argument("--keep", type=int, default=200,
+                    help="cap the history at the most recent N entries")
+    args = ap.parse_args(argv)
+
+    serve_doc = _load(args.serve)
+    resil_doc = _load(args.resilience)
+    if serve_doc is None and resil_doc is None:
+        print("bench_history: no bench docs found — nothing to record")
+        return 1
+    entry = headline_entry(serve_doc, resil_doc, note=args.note)
+    hist = append_history(args.out, entry, keep=args.keep)
+    print(f"bench_history: appended entry {len(hist)} to {args.out}: "
+          f"{json.dumps(entry, sort_keys=True)}")
+    return 0
+
+
+if __name__ == "__main__":
+    import sys
+    sys.exit(main())

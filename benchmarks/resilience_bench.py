@@ -28,9 +28,16 @@ soak runs all of them):
   E  artefact heal   — a corrupted tuning-cache record is quarantined at
                        load and rebuilt by the next ``tune()``.
 
+The bench also exercises the flight recorder end to end: a clean phase
+must produce ZERO dumps, and every request that ends ``failed``/``timeout``
+must have a matching ``request_<state>`` dump attributing it by req_id
+(``--flight-dir`` additionally writes each dump as a ``flight-*.json``
+artefact for ``validate_trace.py --flight`` + CI upload).
+
 Usage:
   PYTHONPATH=src python benchmarks/resilience_bench.py [--smoke]
-      [--out FILE] [--trace FILE] [--metrics-out FILE] [--no-assert]
+      [--out FILE] [--trace FILE] [--metrics-out FILE]
+      [--flight-dir DIR] [--no-assert]
 
 Writes BENCH_resilience.json; ``--trace``/``--metrics-out`` export the
 obs trace/metrics for ``benchmarks/validate_trace.py``.
@@ -107,6 +114,9 @@ def main() -> None:
                     help="enable span tracing; export Chrome trace JSON")
     ap.add_argument("--metrics-out", default=None, metavar="FILE",
                     help="export the metrics registry snapshot as JSON")
+    ap.add_argument("--flight-dir", default=None, metavar="DIR",
+                    help="write flight-recorder dumps as flight-*.json "
+                         "artefacts into DIR")
     ap.add_argument("--no-assert", action="store_true",
                     help="report only; do not enforce the contract")
     args = ap.parse_args()
@@ -118,6 +128,9 @@ def main() -> None:
 
     if args.trace:
         obs.enable()
+    if args.flight_dir:
+        obs.configure_flight(dir=args.flight_dir)
+    obs.flight_clear()
 
     cfg, model, params = _mk_model()
     key = jax.random.PRNGKey(7)
@@ -135,6 +148,27 @@ def main() -> None:
 
     doc = {"phases": {}, "fault_types": []}
     clean_identical = 0
+
+    # every request that ends failed/timeout must leave a flight dump
+    # attributing it; (req_id, state) pairs collected per faulted phase
+    expect_dumps = []
+
+    def _note_failures(results):
+        for i, r in enumerate(results):
+            if r.state in ("failed", "timeout"):
+                expect_dumps.append((i, r.state))
+
+    # -- phase 0: clean traffic must leave the flight recorder silent --------
+    t0 = time.perf_counter()
+    eng = ContinuousEngine(model, params, max_seq=64, slots=2, chunk=4,
+                           min_bucket=8)
+    results = _drive(eng, reqs, key)
+    clean_identical += _tally(results, oracle, set(), doc, "0_clean")
+    assert len(obs.flight_dumps()) == 0, \
+        [d["reason"] for d in obs.flight_dumps()]
+    doc["phases"]["0_clean"]["flight_dumps"] = 0
+    print(f"  0 clean: states={[r.state for r in results]}, "
+          f"no flight dumps ({time.perf_counter() - t0:.1f}s)")
 
     # -- phase A: serving faults in one mix ----------------------------------
     t0 = time.perf_counter()
@@ -159,6 +193,7 @@ def main() -> None:
                                            deadline_s=0.0)]
     with faults.inject(spec) as plan:
         results = _drive(eng, phase_reqs, key)
+    _note_failures(results)
     clean_identical += _tally(results, oracle, targeted, doc, "A_serving")
     rs = eng.stats()["resilience"]
     doc["phases"]["A_serving"].update(
@@ -179,6 +214,7 @@ def main() -> None:
         with faults.inject("serve.pool_exhausted(req_id=0); "
                            "serve.nan_decode(req_id=2)"):
             results = _drive(eng, reqs, key)
+        _note_failures(results)
         doc["fault_types"] += ["pool_exhausted"]
         clean_identical += _tally(results, oracle, {2}, doc, "B_paged")
         doc["phases"]["B_paged"]["deferrals"] = eng.sched.n_deferrals
@@ -195,6 +231,7 @@ def main() -> None:
                                block_size=16)
         with faults.inject("serve.pool_corrupt(after=1)"):
             results = _drive(eng, reqs, key)
+        _note_failures(results)
         doc["fault_types"] += ["pool_corrupt"]
         in_flight_failed = {i for i, r in enumerate(results)
                             if r.state == "failed"}
@@ -283,6 +320,13 @@ def main() -> None:
         "nan_quarantines": obs.counter("serve.nan_quarantines").value,
         "chunk_failures": obs.counter("serve.chunk_failures").value,
     })
+    flight = obs.flight_dumps()
+    doc["flight"] = {
+        "dumps": len(flight),
+        "reasons": sorted({d["reason"] for d in flight}),
+        "expected_request_dumps": len(expect_dumps),
+        "dir": args.flight_dir or "",
+    }
     for name, v in (("bench.resil.faults_injected", doc["faults_injected"]),
                     ("bench.resil.degradations", doc["degradations"]),
                     ("bench.resil.clean_identical", clean_identical)):
@@ -307,10 +351,25 @@ def main() -> None:
         assert doc["faults_injected"] >= want - 1
         assert doc["clean_identical"] >= 1
         assert doc["terminal_states"]["failed"] >= 1
+        # the flight-recorder contract: every failed/timeout request left a
+        # dump attributing it by req_id, degradations dumped too
+        assert expect_dumps, "no failed/timeout requests observed"
+        for rid, state in expect_dumps:
+            assert any(d["reason"] == f"request_{state}"
+                       and d["ctx"].get("req_id") == rid
+                       for d in flight), (rid, state, doc["flight"])
+        if not args.smoke:
+            assert any(d["reason"] == "degradation" for d in flight), \
+                doc["flight"]
+        if args.flight_dir:
+            files = [n for n in os.listdir(args.flight_dir)
+                     if n.startswith("flight-") and n.endswith(".json")]
+            assert len(files) >= len(flight), (len(files), len(flight))
     print(f"  OK: {len(doc['fault_types'])} fault types, "
           f"{int(doc['faults_injected'])} injections, "
           f"{clean_identical} clean requests token-identical, "
-          f"0 crashes")
+          f"{len(flight)} flight dumps "
+          f"({len(expect_dumps)} request failures attributed), 0 crashes")
 
 
 if __name__ == "__main__":

@@ -15,12 +15,19 @@ Checks (stdlib only, no jsonschema dependency):
     step with a non-empty string ``rule``, a ``path`` of slot-name strings
     and JSON-scalar ``params``.  Accepts a bare trace doc, a tuning-cache
     file (every record's ``strategy_trace``), or any JSON object whose
-    (nested) ``strategy_trace`` fields are then checked.
+    (nested) ``strategy_trace`` fields are then checked;
+  * a flight-recorder dump (``--flight``, a ``flight-*.json`` file or a
+    directory of them) is version 1, names a ``reason``, and carries a
+    well-formed ring (``events``: entries with a known ``kind`` + name),
+    an embedded metrics snapshot, and well-formed drift stats;
+  * a ``BENCH_history.json`` trajectory (``--history``) is a list of runs
+    each carrying a timestamp and the headline serve numbers.
 
 Usage:
   python benchmarks/validate_trace.py --trace trace.json \
       [--metrics metrics.json] [--bench BENCH_serve.json] \
-      [--strategy tuning_cache.json]
+      [--strategy tuning_cache.json] [--flight flight-dumps/] \
+      [--history BENCH_history.json]
 
 Exits non-zero with a message naming the first offending record, so a CI
 failure points at the event, not just the file.
@@ -29,6 +36,7 @@ from __future__ import annotations
 
 import argparse
 import json
+import os
 import sys
 
 _PHASES = {"X", "i", "B", "E", "M"}
@@ -166,16 +174,124 @@ def validate_strategy(path: str) -> int:
     return n
 
 
+_RING_KINDS = {"event", "span", "metric"}
+
+
+def validate_flight_doc(doc: dict, where: str) -> int:
+    """One flight-recorder dump document; returns its ring length."""
+    if not isinstance(doc, dict):
+        fail(f"{where}: not an object")
+    if doc.get("version") != 1:
+        fail(f"{where}: unsupported flight-dump version "
+             f"{doc.get('version')!r}")
+    if not isinstance(doc.get("reason"), str) or not doc["reason"]:
+        fail(f"{where}: missing/empty 'reason'")
+    if not isinstance(doc.get("ctx"), dict):
+        fail(f"{where}: 'ctx' must be an object")
+    events = doc.get("events")
+    if not isinstance(events, list):
+        fail(f"{where}: 'events' must be a list")
+    for i, e in enumerate(events):
+        w = f"{where}.events[{i}]"
+        if not isinstance(e, dict):
+            fail(f"{w}: not an object")
+        if e.get("kind") not in _RING_KINDS:
+            fail(f"{w}: unknown ring-entry kind {e.get('kind')!r}")
+        if not isinstance(e.get("name"), str) or not e["name"]:
+            fail(f"{w}: missing/empty 'name'")
+        if not isinstance(e.get("t"), (int, float)):
+            fail(f"{w} ({e['name']!r}): non-numeric 't'")
+        if e["kind"] == "span" and not isinstance(e.get("dur_us"),
+                                                  (int, float)):
+            fail(f"{w} ({e['name']!r}): span without numeric 'dur_us'")
+        if e["kind"] == "metric" and not isinstance(e.get("delta"),
+                                                    (int, float)):
+            fail(f"{w} ({e['name']!r}): metric without numeric 'delta'")
+    validate_metrics(doc.get("metrics", {}), f"{where}[metrics]")
+    drift = doc.get("drift")
+    if drift not in (None, {}):
+        validate_drift_doc(drift, f"{where}[drift]")
+    return len(events)
+
+
+def validate_drift_doc(doc: dict, where: str) -> int:
+    """A drift-auditor snapshot (embedded in dumps, or standalone)."""
+    if not isinstance(doc, dict):
+        fail(f"{where}: not an object")
+    keys = doc.get("keys", {})
+    if not isinstance(keys, dict):
+        fail(f"{where}: 'keys' must be an object")
+    for k, st in keys.items():
+        w = f"{where}.keys[{k}]"
+        if not isinstance(st, dict):
+            fail(f"{w}: not an object")
+        if not isinstance(st.get("n"), int) or st["n"] < 1:
+            fail(f"{w}: bad sample count {st.get('n')!r}")
+        if not isinstance(st.get("fired"), bool):
+            fail(f"{w}: 'fired' must be a bool")
+    ranking = doc.get("ranking", {})
+    if not isinstance(ranking, dict):
+        fail(f"{where}: 'ranking' must be an object")
+    for k, f_ in ranking.items():
+        w = f"{where}.ranking[{k}]"
+        if not isinstance(f_, dict):
+            fail(f"{w}: not an object")
+        for field in ("measured_best", "predicted_best"):
+            if not isinstance(f_.get(field), str):
+                fail(f"{w}: missing '{field}'")
+    return len(keys) + len(ranking)
+
+
+def validate_flight(path: str) -> int:
+    """A dump file, or a directory of flight-*.json dumps; returns the
+    number of dump documents validated."""
+    paths = [path]
+    if os.path.isdir(path):
+        paths = sorted(
+            os.path.join(path, n) for n in os.listdir(path)
+            if n.startswith("flight-") and n.endswith(".json"))
+        if not paths:
+            fail(f"{path}: directory holds no flight-*.json dumps")
+    for p in paths:
+        with open(p) as f:
+            validate_flight_doc(json.load(f), p)
+    return len(paths)
+
+
+def validate_history(path: str) -> int:
+    with open(path) as f:
+        doc = json.load(f)
+    if not isinstance(doc, list):
+        fail(f"{path}: history must be a list of run entries")
+    for i, e in enumerate(doc):
+        w = f"{path}[{i}]"
+        if not isinstance(e, dict):
+            fail(f"{w}: not an object")
+        if not isinstance(e.get("t"), str) or not e["t"]:
+            fail(f"{w}: missing timestamp 't'")
+        if not isinstance(e.get("serve"), dict):
+            fail(f"{w}: missing 'serve' headline dict")
+        for field in ("recompiles", "drift"):
+            if not isinstance(e.get(field), (int, float)):
+                fail(f"{w}: missing numeric '{field}'")
+    return len(doc)
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--trace", default=None)
     ap.add_argument("--metrics", default=None)
     ap.add_argument("--bench", default=None)
     ap.add_argument("--strategy", default=None)
+    ap.add_argument("--flight", default=None,
+                    help="flight-recorder dump file or directory of dumps")
+    ap.add_argument("--history", default=None,
+                    help="BENCH_history.json trajectory file")
     args = ap.parse_args()
-    if not (args.trace or args.metrics or args.bench or args.strategy):
+    if not (args.trace or args.metrics or args.bench or args.strategy
+            or args.flight or args.history):
         fail("nothing to validate: pass --trace/--metrics/--bench/"
-             "--strategy")
+             "--strategy/--flight/--history")
     if args.trace:
         n = validate_trace(args.trace)
         print(f"validate_trace: {args.trace}: {n} events OK")
@@ -191,6 +307,14 @@ def main() -> None:
         n = validate_strategy(args.strategy)
         print(f"validate_trace: {args.strategy}: {n} strategy trace"
               f"{'s' if n != 1 else ''} OK")
+    if args.flight:
+        n = validate_flight(args.flight)
+        print(f"validate_trace: {args.flight}: {n} flight dump"
+              f"{'s' if n != 1 else ''} OK")
+    if args.history:
+        n = validate_history(args.history)
+        print(f"validate_trace: {args.history}: {n} history entr"
+              f"{'ies' if n != 1 else 'y'} OK")
 
 
 if __name__ == "__main__":

@@ -115,6 +115,10 @@ def report_load_failure(path: str, what: str, err: Exception,
     obs.event("artefact.load_failed", path=str(path), what=what,
               error=f"{type(err).__name__}: {err}",
               quarantined=str(quarantined or ""))
+    # an artefact quarantine is silent data loss narrowly averted — worth
+    # the full black box, not just a counter
+    obs.flight_dump("artefact_quarantine", path=str(path), what=what,
+                    error=f"{type(err).__name__}: {err}")
     with _warn_lock:
         if path in _warned_paths:
             return

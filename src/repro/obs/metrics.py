@@ -29,7 +29,20 @@ import threading
 from typing import Dict, Optional
 
 __all__ = ["Counter", "Gauge", "Histogram", "MetricsRegistry", "registry",
-           "counter", "gauge", "histogram", "snapshot", "reset", "export"]
+           "counter", "gauge", "histogram", "snapshot", "reset", "export",
+           "set_delta_sink"]
+
+# Optional tap on counter increments (the flight recorder registers here so
+# metric deltas land in its ring).  One global read + ``if`` per inc() —
+# and increments only happen at boundaries, never in a hot loop.
+_delta_sink = None
+
+
+def set_delta_sink(fn) -> None:
+    """Register ``fn(name, delta)`` to observe every counter increment;
+    ``None`` unregisters."""
+    global _delta_sink
+    _delta_sink = fn
 
 
 class Counter:
@@ -43,6 +56,8 @@ class Counter:
     def inc(self, n: float = 1.0) -> None:
         with self._lock:
             self._value += n
+        if _delta_sink is not None:
+            _delta_sink(self.name, n)
 
     @property
     def value(self) -> float:
@@ -130,14 +145,45 @@ class Histogram:
         with self._lock:
             self._zero()
 
+    def percentile(self, q: float) -> Optional[float]:
+        """Estimate the ``q``-quantile (``0 < q <= 1``) by linear
+        interpolation inside the base-2 bucket holding it, clamped to the
+        observed min/max (so single-value and edge buckets are exact).
+        None when nothing has been observed."""
+        with self._lock:
+            return self._percentiles((q,))[0]
+
+    def _percentiles(self, qs):
+        """Quantile estimates for each q in ``qs``; call with lock held."""
+        if not self._count:
+            return [None] * len(qs)
+        items = sorted(self._buckets.items())
+        out = []
+        for q in qs:
+            target = q * self._count
+            cum = 0
+            val = self._max
+            for k, n in items:
+                if cum + n >= target:
+                    # bucket k spans [2^k, 2^(k+1)); underflow bucket is 0
+                    lo = 0.0 if k == -1024 else float(2.0 ** k)
+                    hi = 0.0 if k == -1024 else float(2.0 ** (k + 1))
+                    val = lo + (target - cum) / n * (hi - lo)
+                    break
+                cum += n
+            out.append(min(max(val, self._min), self._max))
+        return out
+
     def _snap(self) -> dict:
         with self._lock:
+            p50, p95, p99 = self._percentiles((0.5, 0.95, 0.99))
             return {
                 "type": "histogram", "count": self._count,
                 "total": self._total,
                 "mean": self._total / self._count if self._count else 0.0,
                 "min": self._min if self._count else None,
                 "max": self._max if self._count else None,
+                "p50": p50, "p95": p95, "p99": p99,
                 "buckets": {f"2^{k}" if k != -1024 else "<=0": v
                             for k, v in sorted(self._buckets.items())},
             }

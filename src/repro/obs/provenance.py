@@ -45,7 +45,7 @@ import time
 from typing import Dict, List, Optional
 
 __all__ = ["Decision", "ProvenanceLog", "log", "record", "decisions",
-           "get", "clear", "explain"]
+           "get", "annotate", "clear", "explain"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -131,6 +131,19 @@ class ProvenanceLog:
     def get(self, key: str) -> Optional[Decision]:
         return self._decisions.get(key)
 
+    def annotate(self, key: str, **changes) -> Optional[Decision]:
+        """Replace fields on the decision recorded under ``key`` (Decisions
+        are frozen, so this installs a modified copy).  The drift audit uses
+        it to mark entries ``stale``.  Returns the new Decision, or None
+        when nothing is recorded under ``key``."""
+        with self._lock:
+            d = self._decisions.get(key)
+            if d is None:
+                return None
+            d2 = dataclasses.replace(d, **changes)
+            self._decisions[key] = d2
+            return d2
+
     def decisions(self, kind: Optional[str] = None) -> List[Decision]:
         with self._lock:
             ds = list(self._decisions.values())
@@ -198,6 +211,10 @@ def decisions(kind: Optional[str] = None) -> List[Decision]:
 
 def get(key: str) -> Optional[Decision]:
     return log().get(key)
+
+
+def annotate(key: str, **changes) -> Optional[Decision]:
+    return log().annotate(key, **changes)
 
 
 def clear() -> None:

@@ -37,7 +37,19 @@ from typing import Dict, List, Optional
 
 __all__ = ["Tracer", "tracer", "span", "traced", "instant",
            "enable", "disable", "enabled", "events", "clear", "to_chrome",
-           "export"]
+           "export", "set_span_sink"]
+
+# Optional tap on span completions (the flight recorder registers here).
+# Only consulted from _record, i.e. when tracing is enabled — the disabled
+# path stays one attribute read + one ``if``.
+_span_sink = None
+
+
+def set_span_sink(fn) -> None:
+    """Register ``fn(name, dur_us, args, error)`` to observe every span
+    completion while tracing is enabled; ``None`` unregisters."""
+    global _span_sink
+    _span_sink = fn
 
 
 class _NullSpan:
@@ -154,6 +166,8 @@ class Tracer:
             ev["args"] = _jsonable(extra)
         with self._lock:
             self._events.append(ev)
+        if _span_sink is not None:
+            _span_sink(name, ev["dur"], args, error)
 
     # -- export --------------------------------------------------------------
 

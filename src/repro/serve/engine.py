@@ -199,6 +199,7 @@ class _EngineBase:
         # ``mark_warm()``; None until the engine declares itself warm
         self._jit_baseline = None
         self._recompiles_after_warm = 0
+        self._drift_audited = False
         if tuning_cache is not None:
             self._warm(batch_sizes, aot)
         self._prefill = jax.jit(
@@ -284,11 +285,15 @@ class _EngineBase:
                 return True
         return False
 
-    def _call_chunk(self, args):
+    def _call_chunk(self, args, req_ids: str = ""):
         """Invoke the fused decode chunk with the resilience wrapping: the
         ``serve.slow_chunk`` / ``serve.chunk_error`` fault sites, the
         chunk-level straggler watchdog, and bounded retry-with-backoff for
         transient failures.
+
+        ``req_ids`` (comma-joined active request ids) attributes the fault
+        sites and failure events to the requests riding the chunk, so a
+        drill's trace/flight-dump names who was affected.
 
         Retry is only safe while the donated buffers are intact — faults
         injected here fire *before* dispatch, and a dispatch that died
@@ -303,10 +308,11 @@ class _EngineBase:
                 if self._watchdog is not None:
                     self._watchdog.arm(self._n_chunk_calls)
                 try:
-                    f = faults.should_fire("serve.slow_chunk")
+                    f = faults.should_fire("serve.slow_chunk",
+                                           req_ids=req_ids)
                     if f is not None:
                         time.sleep(float(f.value or 0.05))
-                    faults.raise_if("serve.chunk_error")
+                    faults.raise_if("serve.chunk_error", req_ids=req_ids)
                     return self._chunk_fn(*args)
                 finally:
                     if self._watchdog is not None:
@@ -315,6 +321,7 @@ class _EngineBase:
                 attempt += 1
                 obs.counter("serve.chunk_failures").inc()
                 obs.event("serve.chunk_failure", attempt=attempt,
+                          req_ids=req_ids,
                           error=f"{type(e).__name__}: {e}")
                 if attempt > rc.max_chunk_retries or self._args_consumed(args):
                     raise
@@ -395,6 +402,7 @@ class _EngineBase:
             "prefill_entries": self.prefill_cache_size(),
             "recompiles_after_warm": self._recompiles_after_warm,
             "executor_cache": compiler.executor_cache().stats(),
+            "latency": self._latency_stats(),
             "resilience": {
                 "chunk_retries": self._n_chunk_retries,
                 "chunk_quarantines": self._n_chunk_quarantines,
@@ -405,6 +413,27 @@ class _EngineBase:
             },
         }
 
+    @staticmethod
+    def _latency_stats() -> dict:
+        """Percentile summaries of the serving latency histograms.
+
+        Reads the process-wide metrics registry (histograms are global, so
+        numbers cover every engine in the process); only histograms with
+        observations appear."""
+        reg = obs.registry()
+        out = {}
+        for name in ("serve.queue_wait_s", "serve.ttft_s", "serve.e2e_s",
+                     "serve.decode_tok_s", "serve.chunk_s"):
+            h = reg.histogram(name)
+            if h.count:
+                out[name.split(".", 1)[1]] = {
+                    "count": h.count, "mean": h.mean,
+                    "p50": h.percentile(0.50),
+                    "p95": h.percentile(0.95),
+                    "p99": h.percentile(0.99),
+                }
+        return out
+
     def _jit_sizes(self):
         return (self.decode_cache_misses(), self.prefill_cache_size())
 
@@ -413,6 +442,24 @@ class _EngineBase:
         *recompile* — flagged by the detector, counted in ``stats()``.
         ``run`` calls this automatically when its first batch completes."""
         self._jit_baseline = self._jit_sizes()
+        self._audit_drift()
+
+    def _audit_drift(self) -> None:
+        """Serve-boundary roofline audit: re-rank every *measured* tuning
+        record for this engine's cache under the current HwModel and fire
+        ``tune.drift`` on predicted-vs-measured ranking disagreement.
+
+        Runs once per engine at the warm boundary (analytic only — builds
+        exprs, compiles nothing); records without per-candidate timings
+        are skipped, so analytic-only caches cost ~nothing."""
+        if self.tuning_cache is None or self._drift_audited:
+            return
+        self._drift_audited = True
+        try:
+            from repro.autotune.api import _resolve_cache
+            obs.audit_cache(_resolve_cache(self.tuning_cache))
+        except Exception:
+            log.debug("drift audit skipped", exc_info=True)
 
     def _check_recompiles(self) -> None:
         """Compare jit-cache sizes against the warm baseline; flag growth.
@@ -567,8 +614,10 @@ class BatchedEngine(_EngineBase):
         pos = jnp.asarray(lengths, jnp.int32)
         tokens = first
         while any(n > 0 for n in remaining):
+            live = ",".join(str(i) for i, n in enumerate(remaining) if n > 0)
             cache, tokens, pos, keys, toks, _bad = self._call_chunk(
-                (self.params, cache, tokens, pos, keys, temps, top_ks, None))
+                (self.params, cache, tokens, pos, keys, temps, top_ks, None),
+                req_ids=live)
             block = np.asarray(toks)          # the chunk's one host sync
             for i in range(b):
                 take = min(remaining[i], block.shape[1])
@@ -813,8 +862,15 @@ class ContinuousEngine(_EngineBase):
         chunk each, then decode one fused chunk.
 
         Returns the request ids retired at this boundary."""
-        with obs.span("serve.step_chunk"):
-            finished = self._step_chunk_inner()
+        try:
+            with obs.span("serve.step_chunk"):
+                finished = self._step_chunk_inner()
+        except Exception as e:
+            # the resilience ladder is exhausted (or disabled) and the
+            # exception is about to leave the engine: capture the black box
+            obs.flight_dump("unhandled_exception",
+                            error=f"{type(e).__name__}: {e}")
+            raise
         self._check_recompiles()
         return finished
 
@@ -846,13 +902,17 @@ class ContinuousEngine(_EngineBase):
                     finished.append(rid)
         if self.sched.busy_slots():
             self._before_chunk()              # hook: ShardedEngine pins here
+            req_ids = ",".join(str(s.req_id) for s in self.sched.slots
+                               if not s.free)
+            t0 = time.perf_counter()
             try:
-                with obs.span("serve.decode_chunk", chunk=self.chunk):
+                with obs.span("serve.decode_chunk", chunk=self.chunk,
+                              req_ids=req_ids):
                     (self.cache, self.tokens, self.pos, self.keys, toks,
                      bad) = self._call_chunk(
                         (self.params, self.cache, self.tokens, self.pos,
                          self.keys, self.temps, self.top_ks,
-                         self.block_tables))
+                         self.block_tables), req_ids=req_ids)
                     block = np.asarray(toks)  # the chunk's one host sync
                     bad_host = np.asarray(bad)
             except Exception as e:
@@ -860,6 +920,14 @@ class ContinuousEngine(_EngineBase):
                     raise
                 finished.extend(self._quarantine_chunk_failure(e))
             else:
+                # per-chunk wall time, measured at the boundary the host
+                # already pays: the latency histogram + the drift auditor's
+                # baseline-relative watch on this engine shape
+                dt = time.perf_counter() - t0
+                obs.histogram("serve.chunk_s").observe(dt)
+                obs.drift_observe(
+                    f"serve|decode_chunk|slots={self.slots}"
+                    f"|chunk={self.chunk}", dt)
                 slot_of = {s.req_id: i
                            for i, s in enumerate(self.sched.slots)
                            if not s.free}

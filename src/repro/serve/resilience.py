@@ -97,4 +97,8 @@ def record_degradation(kind: str, kernel: str, key: str, frm: str, to: str,
     obs.counter("serve.degradations").inc()
     obs.event("serve.degraded", kind=kind, kernel=kernel, key=key,
               origin=origin, note=str(kw.get("note", "")))
+    # a degradation is a strategy change under duress: snapshot the black
+    # box so the dump shows what led up to it
+    obs.flight_dump("degradation", kind=kind, kernel=kernel, key=key,
+                    frm=frm, to=to)
     return origin

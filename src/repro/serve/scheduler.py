@@ -149,6 +149,8 @@ class Scheduler:
         self.outputs[req_id] = []
         self.pending.append(req_id)
         obs.counter("serve.requests_submitted").inc()
+        obs.event("serve.submit", req_id=req_id, prompt_len=prompt_len,
+                  max_new=max_new)
 
     # -- chunk-boundary decisions -------------------------------------------
 
@@ -223,8 +225,10 @@ class Scheduler:
         meta = self.meta.get(slot.req_id)
         if meta is not None and "t_first" not in meta:
             meta["t_first"] = time.perf_counter()
-            obs.histogram("serve.ttft_s").observe(
-                meta["t_first"] - meta["t_submit"])
+            ttft = meta["t_first"] - meta["t_submit"]
+            obs.histogram("serve.ttft_s").observe(ttft)
+            obs.event("serve.first_token", req_id=slot.req_id,
+                      slot=slot_idx, ttft_s=round(ttft, 6))
         if slot.remaining > 0:
             self.outputs[slot.req_id].append(int(token))
             slot.remaining -= 1
@@ -291,6 +295,11 @@ class Scheduler:
             obs.counter(f"serve.requests_{state}").inc()
             obs.event("serve.request_terminal", req_id=rid, state=state,
                       reason=reason)
+        if state in ("failed", "timeout"):
+            # the black box: everything the process saw leading up to this
+            # request going bad (cancellation is a caller action, not a
+            # failure — no dump)
+            obs.flight_dump(f"request_{state}", req_id=rid, why=reason)
 
     def _slot_of(self, rid: int) -> Optional[int]:
         for i, s in enumerate(self.slots):

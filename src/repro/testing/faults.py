@@ -36,8 +36,9 @@ Sites wired into the tree (see docs/resilience.md for the fault model):
 
     serve.nan_prefill   ctx req_id — poison a request's admission logits
     serve.nan_decode    ctx req_id — poison a slot's KV cache after admit
-    serve.chunk_error   raise a transient error before the decode chunk
-    serve.slow_chunk    sleep ``value`` seconds before the decode chunk
+    serve.chunk_error   ctx req_ids — raise a transient error before the
+                        decode chunk (req_ids: comma-joined active ids)
+    serve.slow_chunk    ctx req_ids — sleep ``value`` s before the chunk
     serve.pool_exhausted  admission sees a block-starved pool (deferral)
     serve.pool_corrupt  damage the KV block pool (validate() then catches)
     executor.build      ctx key — raise InjectedFault in executor staging
@@ -225,7 +226,9 @@ def should_fire(site: str, **ctx) -> Optional[Fault]:
             return None
     from repro import obs
     obs.counter("faults.injected").inc()
-    obs.event("faults.injected", site=site,
+    # the site ctx (req_id / req_ids / key / path) rides into the event so
+    # traces and flight dumps attribute each firing to the request it hit
+    obs.event("faults.injected", site=site, fault=f.describe(),
               **{k: str(v) for k, v in ctx.items()})
     return f
 
