@@ -17,6 +17,8 @@ Entry shape (validated by ``validate_trace.py --history``)::
      "drift": 0,                           # tune.drift firings observed
      "resilience": {"faults_injected": ..., "clean_identical": ...,
                     "flight_dumps": ...},
+     "host_loss": {"events": ..., "evacuations": ...,   # only when the
+                   "token_identical": ...},             # drill phase ran
      "note": "..."}                        # optional, e.g. the git sha
 
 Usage:
@@ -89,6 +91,14 @@ def headline_entry(serve_doc=None, resil_doc=None, note="", t=None):
         if isinstance(fl.get("dumps"), (int, float)):
             resilience["flight_dumps"] = float(fl["dumps"])
 
+    host_loss = {}
+    if resil_doc:
+        hl = resil_doc.get("host_loss") or {}
+        for k in ("events", "evacuations", "token_identical", "requests"):
+            v = hl.get(k)
+            if isinstance(v, (int, float)):
+                host_loss[k] = float(v)
+
     entry = {
         "t": t or time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime()),
         "serve": serve,
@@ -96,6 +106,10 @@ def headline_entry(serve_doc=None, resil_doc=None, note="", t=None):
         "drift": drift,
         "resilience": resilience,
     }
+    if host_loss:
+        # the host-loss drill's headline: a regression here means the
+        # engine stopped surviving mesh shrinks to token identity
+        entry["host_loss"] = host_loss
     if note:
         entry["note"] = note
     return entry

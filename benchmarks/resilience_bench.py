@@ -26,7 +26,18 @@ soak runs all of them):
   C  pool corruption — paged -> dense degradation mid-traffic;
   D  kernel ladder   — executor build failures: tuned -> default -> jnp;
   E  artefact heal   — a corrupted tuning-cache record is quarantined at
-                       load and rebuilt by the next ``tune()``.
+                       load and rebuilt by the next ``tune()``;
+  F  host loss       — (``--host-loss``, needs an 8-device platform) a
+                       2-host ShardedEngine loses host 1 mid-decode: its
+                       slots evacuate to the queue front, the mesh shrinks
+                       ``data=8 -> data=4`` (recorded as provenance origin
+                       ``degraded(mesh(...))`` + exactly ONE ``host_lost``
+                       flight dump per loss event), and every request —
+                       survivor and evacuee — retires token-identical to
+                       the fault-free oracle; the checksummed scheduler
+                       journal (``--journal-out``) verifies and replays.
+                       A clean sharded run first proves zero dumps and
+                       zero degradations without the fault.
 
 The bench also exercises the flight recorder end to end: a clean phase
 must produce ZERO dumps, and every request that ends ``failed``/``timeout``
@@ -117,6 +128,13 @@ def main() -> None:
     ap.add_argument("--flight-dir", default=None, metavar="DIR",
                     help="write flight-recorder dumps as flight-*.json "
                          "artefacts into DIR")
+    ap.add_argument("--host-loss", action="store_true",
+                    help="run phase F (ShardedEngine host-loss drill; "
+                         "needs >= 8 devices, e.g. XLA_FLAGS="
+                         "--xla_force_host_platform_device_count=8)")
+    ap.add_argument("--journal-out", default=None, metavar="FILE",
+                    help="phase F: write the scheduler journal here "
+                         "(validate with validate_trace.py --journal)")
     ap.add_argument("--no-assert", action="store_true",
                     help="report only; do not enforce the contract")
     args = ap.parse_args()
@@ -303,6 +321,101 @@ def main() -> None:
         "quarantine_dir": cache_path + ".quarantine"}
     print(f"  E artefact heal: entry quarantined + rebuilt by tune() "
           f"({time.perf_counter() - t0:.1f}s)")
+
+    # -- phase F: host loss — evacuation, mesh shrink, checksummed journal ---
+    if args.host_loss and len(jax.devices()) < 8:
+        print("  F host loss: SKIPPED — needs an 8-device platform (run "
+              "under XLA_FLAGS=--xla_force_host_platform_device_count=8)")
+        doc["phases"]["F_host_loss"] = {"skipped": "needs 8 devices"}
+    elif args.host_loss:
+        t0 = time.perf_counter()
+        import tempfile
+        from repro.serve.domains import SchedulerJournal
+        from repro.serve.engine import ShardedEngine
+        # 8 phase-local requests so both hosts' slots carry work when the
+        # fault fires; decodes long enough (16 tokens, chunk=4) that every
+        # request is still in flight at the loss boundary
+        fkey = jax.random.PRNGKey(7)
+        f_reqs = [Request(
+            prompt=jax.random.randint(jax.random.fold_in(fkey, 200 + i),
+                                      (4 + i,), 0, cfg.vocab),
+            max_new_tokens=16, temperature=0.0) for i in range(8)]
+        f_oracle = ContinuousEngine(model, params, max_seq=64, slots=8,
+                                    chunk=4, min_bucket=8).run(f_reqs,
+                                                               key=fkey)
+
+        # a clean sharded run first: zero NEW dumps, zero NEW degradations
+        dumps0 = len(obs.flight_dumps())
+        degr0 = obs.counter("serve.degradations").value
+        eng = ShardedEngine(model, params, max_seq=64, slots=8, chunk=4,
+                            min_bucket=8, mesh=jax.make_mesh((8,), ("data",)),
+                            hosts=2)
+        clean = _drive(eng, f_reqs, fkey)
+        assert all(r.state == "ok" for r in clean)
+        assert [list(r.tokens) for r in clean] == f_oracle
+        assert len(obs.flight_dumps()) == dumps0, \
+            "clean sharded run left flight dumps"
+        assert obs.counter("serve.degradations").value == degr0, \
+            "clean sharded run recorded a degradation"
+
+        # host 1 dies three boundaries in
+        jpath = args.journal_out or os.path.join(
+            tempfile.mkdtemp(prefix="resil-bench-"), "journal.jsonl")
+        eng = ShardedEngine(model, params, max_seq=64, slots=8, chunk=4,
+                            min_bucket=8, mesh=jax.make_mesh((8,), ("data",)),
+                            hosts=2, journal=jpath)
+        with faults.inject("mesh.host_lost(host=1, after=3)") as plan:
+            results = _drive(eng, f_reqs, fkey)
+        st = eng.stats()
+        n_events = st["resilience"]["host_losses"]
+        assert plan[0].fired == 1 and n_events == 1, (plan[0].fired,
+                                                      n_events)
+        # zero crashes; survivors retired in place, evacuees re-admitted on
+        # the shrunk mesh — ALL token-identical to the fault-free oracle
+        assert all(r.state == "ok" for r in results), \
+            [r.state for r in results]
+        ident = sum(list(r.tokens) == f_oracle[i]
+                    for i, r in enumerate(results))
+        assert ident == len(f_reqs), f"{len(f_reqs) - ident} diverged"
+        clean_identical += ident
+        assert st["mesh"]["descriptor"] == "data=4", st["mesh"]
+        assert eng.sched.n_evacuations >= 1
+        # the shrink is a recorded strategy change...
+        mesh_degr = sorted({d.origin for d in obs.decisions()
+                            if d.origin.startswith("degraded(mesh(")})
+        assert mesh_degr, "mesh shrink not in provenance"
+        # ...with exactly ONE flight dump per host-loss event
+        host_dumps = [d for d in obs.flight_dumps()
+                      if d["reason"] == "host_lost"]
+        assert len(host_dumps) == n_events, \
+            (len(host_dumps), n_events)
+        # the checksummed journal tells the whole story and verifies clean
+        jstate = SchedulerJournal.load(jpath)
+        assert jstate.clean, "journal failed checksum verification"
+        assert len(jstate.shrinks) == 1, jstate.shrinks
+        assert jstate.shrinks[0]["to"] == "data=4"
+        assert jstate.evacuations == eng.sched.n_evacuations
+        doc["fault_types"] += ["host_lost"]
+        doc["phases"]["F_host_loss"] = {
+            "states": {str(i): r.state for i, r in enumerate(results)},
+            "clean_identical": ident, "clean_diverged": 0,
+            "origins": mesh_degr,
+        }
+        doc["host_loss"] = {
+            "events": n_events,
+            "evacuations": eng.sched.n_evacuations,
+            "descriptor_before": "data=8",
+            "descriptor_after": st["mesh"]["descriptor"],
+            "token_identical": ident,
+            "requests": len(f_reqs),
+            "host_lost_dumps": len(host_dumps),
+            "journal": jpath,
+            "journal_clean": jstate.clean,
+        }
+        print(f"  F host loss: data=8->data=4, "
+              f"{eng.sched.n_evacuations} evacuated, {ident}/{len(f_reqs)} "
+              f"token-identical, {len(host_dumps)} host_lost dump, "
+              f"journal clean ({time.perf_counter() - t0:.1f}s)")
 
     # -- report ---------------------------------------------------------------
     doc.update({

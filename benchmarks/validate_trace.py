@@ -21,13 +21,19 @@ Checks (stdlib only, no jsonschema dependency):
     well-formed ring (``events``: entries with a known ``kind`` + name),
     an embedded metrics snapshot, and well-formed drift stats;
   * a ``BENCH_history.json`` trajectory (``--history``) is a list of runs
-    each carrying a timestamp and the headline serve numbers.
+    each carrying a timestamp and the headline serve numbers;
+  * a scheduler journal (``--journal``, JSONL from
+    ``repro.serve.domains.SchedulerJournal``) has every line's sha256
+    checksum recomputed and verified, every record kind known
+    (submit/progress/terminal/evacuate/shrink), and the required fields
+    per kind present — independently of the repro tree, so a journal CI
+    uploads is provably replayable.
 
 Usage:
   python benchmarks/validate_trace.py --trace trace.json \
       [--metrics metrics.json] [--bench BENCH_serve.json] \
       [--strategy tuning_cache.json] [--flight flight-dumps/] \
-      [--history BENCH_history.json]
+      [--history BENCH_history.json] [--journal journal.jsonl]
 
 Exits non-zero with a message naming the first offending record, so a CI
 failure points at the event, not just the file.
@@ -277,6 +283,50 @@ def validate_history(path: str) -> int:
     return len(doc)
 
 
+# repro.serve.domains.JOURNAL_KINDS + the fields a replay needs per kind
+# (stdlib-only mirror: this validator must not import the repro tree)
+_JOURNAL_FIELDS = {
+    "submit": ("rid", "prompt", "max_new", "temperature", "top_k", "stream"),
+    "progress": ("rid", "tokens", "n"),
+    "terminal": ("rid", "state"),
+    "evacuate": ("rid", "host"),
+    "shrink": ("frm", "to", "host"),
+}
+
+
+def validate_journal(path: str) -> int:
+    """A scheduler journal: per-line checksum recompute + schema check.
+    An empty journal (no traffic recorded) is valid; a torn or tampered
+    line is a failure — CI uploads must verify, the lenient torn-tail
+    recovery is the engine restart path's job, not the validator's."""
+    import hashlib
+    with open(path) as f:
+        lines = [ln for ln in f.read().splitlines() if ln.strip()]
+    for i, line in enumerate(lines):
+        where = f"{path}:{i + 1}"
+        try:
+            rec = json.loads(line)
+        except ValueError as e:
+            fail(f"{where}: unparseable record ({e})")
+        if not isinstance(rec, dict):
+            fail(f"{where}: record is not an object")
+        want = rec.pop("checksum", None)
+        if not isinstance(want, str) or not want.startswith("sha256:"):
+            fail(f"{where}: missing/malformed 'checksum'")
+        blob = json.dumps(rec, sort_keys=True, separators=(",", ":"),
+                          default=str)
+        got = "sha256:" + hashlib.sha256(blob.encode()).hexdigest()
+        if got != want:
+            fail(f"{where}: checksum mismatch (journal tampered or torn)")
+        kind = rec.get("kind")
+        if kind not in _JOURNAL_FIELDS:
+            fail(f"{where}: unknown record kind {kind!r}")
+        for field in _JOURNAL_FIELDS[kind]:
+            if field not in rec:
+                fail(f"{where} ({kind}): missing field {field!r}")
+    return len(lines)
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--trace", default=None)
@@ -287,11 +337,13 @@ def main() -> None:
                     help="flight-recorder dump file or directory of dumps")
     ap.add_argument("--history", default=None,
                     help="BENCH_history.json trajectory file")
+    ap.add_argument("--journal", default=None,
+                    help="scheduler journal (JSONL) to checksum-verify")
     args = ap.parse_args()
     if not (args.trace or args.metrics or args.bench or args.strategy
-            or args.flight or args.history):
+            or args.flight or args.history or args.journal):
         fail("nothing to validate: pass --trace/--metrics/--bench/"
-             "--strategy/--flight/--history")
+             "--strategy/--flight/--history/--journal")
     if args.trace:
         n = validate_trace(args.trace)
         print(f"validate_trace: {args.trace}: {n} events OK")
@@ -315,6 +367,10 @@ def main() -> None:
         n = validate_history(args.history)
         print(f"validate_trace: {args.history}: {n} history entr"
               f"{'ies' if n != 1 else 'y'} OK")
+    if args.journal:
+        n = validate_journal(args.journal)
+        print(f"validate_trace: {args.journal}: {n} journal record"
+              f"{'s' if n != 1 else ''} checksum-verified OK")
 
 
 if __name__ == "__main__":

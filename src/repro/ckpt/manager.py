@@ -6,10 +6,16 @@ rename; an async mode runs the serialisation on a worker thread so the train
 loop overlaps I/O with compute.  Arrays are stored as host (fully replicated)
 values with their *logical* pytree paths — restore re-places them under any
 mesh (elastic re-mesh: restore onto a different topology than the save).
+
+Manifests go through the checksummed atomic store in ``repro.ft.artefacts``
+— the same self-healing write path the tuning cache and scheduler journals
+use.  A corrupt manifest is quarantined (``manifest.json.quarantine/``) and
+its step vanishes from ``all_steps()``; ``restore_latest`` falls back to
+the newest step that still verifies instead of crashing the resume path.
 """
 from __future__ import annotations
 
-import json
+import logging
 import os
 import shutil
 import tempfile
@@ -18,6 +24,10 @@ from typing import Any, Dict, List, Optional, Tuple
 
 import jax
 import numpy as np
+
+from repro.ft import artefacts
+
+log = logging.getLogger("repro.ckpt")
 
 
 def _flatten(tree) -> Dict[str, np.ndarray]:
@@ -78,8 +88,8 @@ class CheckpointManager:
         tmp = tempfile.mkdtemp(dir=self.dir, prefix=".tmp_")
         try:
             np.savez(os.path.join(tmp, "arrays.npz"), **flat)
-            with open(os.path.join(tmp, "manifest.json"), "w") as f:
-                json.dump({"step": step, "extra": extra}, f)
+            artefacts.save_json(os.path.join(tmp, "manifest.json"),
+                                {"step": step, "extra": extra})
             final = os.path.join(self.dir, f"step_{step:010d}")
             if os.path.exists(final):
                 shutil.rmtree(final)
@@ -116,16 +126,33 @@ class CheckpointManager:
 
     def restore(self, step: int, template) -> Tuple[Any, Dict]:
         path = os.path.join(self.dir, f"step_{step:010d}")
-        with open(os.path.join(path, "manifest.json")) as f:
-            manifest = json.load(f)
+        manifest = artefacts.load_json(os.path.join(path, "manifest.json"),
+                                       what="checkpoint manifest")
+        if manifest is None:
+            # missing or corrupt: corrupt copies are already quarantined +
+            # reported by load_json, which also removes the step from
+            # all_steps() (no manifest.json left) — raise so restore_latest
+            # falls back to an older step
+            raise ValueError(
+                f"checkpoint manifest for step {step} missing or corrupt "
+                f"(quarantined; see artefact.load_failed events)")
         with np.load(os.path.join(path, "arrays.npz")) as z:
             flat = {k: z[k] for k in z.files}
         state = _unflatten_into(template, flat)
         return state, manifest.get("extra", {})
 
     def restore_latest(self, template) -> Optional[Tuple[int, Any, Dict]]:
-        step = self.latest_step()
-        if step is None:
-            return None
-        state, extra = self.restore(step, template)
-        return step, state, extra
+        """Restore the newest checkpoint that VERIFIES — a corrupt manifest
+        or damaged arrays skips back to the next older step instead of
+        killing the resume (losing a few steps of progress beats losing
+        the run)."""
+        for step in reversed(self.all_steps()):
+            try:
+                state, extra = self.restore(step, template)
+            except (ValueError, KeyError, OSError) as e:
+                log.warning("checkpoint step %d failed to restore (%s: "
+                            "%s); falling back to the previous step",
+                            step, type(e).__name__, e)
+                continue
+            return step, state, extra
+        return None

@@ -27,6 +27,12 @@ store the same discipline:
 
 Missing files are *not* failures — they return None silently (a cold
 cache is the normal first-run state).
+
+Append-only journals (:func:`append_record` / :func:`read_records`) get the
+same discipline per *record*: each JSONL line embeds its own checksum, so a
+reader can recover a crash-torn journal to the last complete record — the
+torn tail is the expected crash artefact, and recovery IS dropping it (no
+quarantine; the signal is the ``artefact.journal_torn`` counter + event).
 """
 from __future__ import annotations
 
@@ -42,7 +48,7 @@ from repro import obs
 from repro.testing import faults
 
 __all__ = ["save_json", "load_json", "quarantine", "report_load_failure",
-           "CHECKSUM_FIELD"]
+           "append_record", "read_records", "CHECKSUM_FIELD"]
 
 log = logging.getLogger("repro.ft.artefacts")
 
@@ -163,3 +169,71 @@ def load_json(path: str, *, what: str = "artefact",
         qpath = quarantine(path, qdir)
         report_load_failure(path, what, e, qpath)
         return None
+
+
+# ---------------------------------------------------------------------------
+# append-only checksummed journals (JSONL, one verified record per line)
+# ---------------------------------------------------------------------------
+
+def append_record(path: str, record: dict) -> None:
+    """Append one record to a JSONL journal with an embedded per-record
+    checksum (same sha256-over-canonical-JSON as :func:`save_json`, scoped
+    to the single record).
+
+    The write is a single ``write()`` of one line — the common torn-write
+    failure is a truncated *last* line, which :func:`read_records` detects
+    and drops.  Creates the file (and parent directory) on first append."""
+    payload = {k: v for k, v in record.items() if k != CHECKSUM_FIELD}
+    out = dict(payload)
+    out[CHECKSUM_FIELD] = _digest(payload)
+    line = json.dumps(out, sort_keys=True, separators=(",", ":"),
+                      default=str)
+    d = os.path.dirname(path)
+    if d:
+        os.makedirs(d, exist_ok=True)
+    with open(path, "a") as f:
+        f.write(line + "\n")
+
+
+def read_records(path: str, *, what: str = "journal"):
+    """Read a checksummed JSONL journal; returns ``(records, clean)``.
+
+    Reading stops at the first unparseable or checksum-failing line: a
+    crash mid-append leaves a truncated tail, and the records up to the
+    last complete, verified line ARE the recoverable state.  ``clean`` is
+    False when a tail was dropped — reported through the always-on
+    ``artefact.journal_torn`` counter + a structured event naming the path
+    and line (the file itself is left untouched: subsequent appends go
+    after the torn bytes, so callers recovering a journal should replay
+    into a fresh one).  A missing file is an empty, clean journal."""
+    try:
+        with open(path) as f:
+            lines = f.readlines()
+    except OSError:
+        return [], True
+    records = []
+    for i, line in enumerate(lines):
+        line = line.strip()
+        if not line:
+            continue
+        try:
+            doc = json.loads(line)
+            if not isinstance(doc, dict):
+                raise ValueError(f"record is {type(doc).__name__}, "
+                                 f"expected object")
+            stored = doc.pop(CHECKSUM_FIELD, None)
+            if stored is None or stored != _digest(doc):
+                raise ValueError("record checksum mismatch (torn write "
+                                 "or bit flip)")
+        except ValueError as e:
+            obs.counter("artefact.journal_torn").inc()
+            obs.event("artefact.journal_torn", path=str(path), what=what,
+                      line=i, error=f"{type(e).__name__}: {e}",
+                      recovered=len(records))
+            log.warning(
+                "%s journal %s torn at line %d (%s); recovered %d complete "
+                "records up to the last verified boundary", what, path, i,
+                e, len(records))
+            return records, False
+        records.append(doc)
+    return records, True

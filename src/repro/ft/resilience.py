@@ -98,20 +98,34 @@ def guard_update(metrics: Dict) -> bool:
     return bool(np.isfinite(loss) and np.isfinite(gn))
 
 
-def elastic_remesh(preferred_shape, axis_names):
-    """Build the largest mesh of ``axis_names`` that the *currently available*
-    devices support, shrinking the leading (data) axis first — elastic
-    scale-down after node loss; checkpoints re-place transparently because
-    they are stored mesh-agnostically (ckpt/manager.py)."""
-    n = len(jax.devices())
-    shape = list(preferred_shape)
-    total = int(np.prod(shape))
-    while total > n and shape[0] > 1:
-        shape[0] //= 2
-        total = int(np.prod(shape))
-    if total > n:
-        raise RuntimeError(f"not enough devices: need {total}, have {n}")
-    return jax.make_mesh(tuple(shape), tuple(axis_names))
+def elastic_remesh(preferred, axis_names=None):
+    """Build the largest mesh the *currently available* devices support,
+    shrinking the leading (data) axis first — elastic scale-down after node
+    loss; checkpoints re-place transparently because they are stored
+    mesh-agnostically (ckpt/manager.py).
+
+    ``preferred`` is a canonical mesh descriptor string
+    (``"data=8"`` / ``"data=8,model=2"`` — ``repro.mesh.strategy``) or a
+    legacy shape tuple paired with ``axis_names``.  The shrink itself is
+    :func:`repro.mesh.strategy.shrink_descriptor`, so the shape the mesh is
+    built from round-trips through ``parse_descriptor`` and is exactly what
+    tuning/executor cache keys will carry for it."""
+    from repro.mesh import strategy as ms
+    if isinstance(preferred, str):
+        if axis_names is not None:
+            raise TypeError("axis_names only applies to shape-tuple form; "
+                            "a descriptor string already names its axes")
+        desc = preferred
+    else:
+        if axis_names is None:
+            raise TypeError("shape-tuple form needs axis_names")
+        desc = ",".join(f"{a}={int(s)}"
+                        for a, s in zip(axis_names, preferred))
+    axes = ms.parse_descriptor(ms.shrink_descriptor(desc, len(jax.devices())))
+    if not axes:
+        raise ValueError(f"elastic_remesh needs at least one axis, got "
+                         f"{preferred!r}")
+    return jax.make_mesh(tuple(axes.values()), tuple(axes.keys()))
 
 
 class TrainLoop:

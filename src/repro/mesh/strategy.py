@@ -24,7 +24,8 @@ from dataclasses import dataclass
 from typing import Dict, Optional, Tuple
 
 __all__ = ["MeshStrategy", "descriptor", "parse_descriptor",
-           "current_descriptor", "resolve_mesh", "SINGLE"]
+           "current_descriptor", "resolve_mesh", "shrink_descriptor",
+           "SINGLE"]
 
 SINGLE = "single"
 
@@ -66,6 +67,42 @@ def parse_descriptor(desc: str) -> Dict[str, int]:
                              f"{part!r} in {desc!r}")
         out[name] = int(size)
     return out
+
+
+def shrink_descriptor(desc: str, n_devices: int,
+                      axis: Optional[str] = None) -> str:
+    """The largest descriptor reachable from ``desc`` on ``n_devices``
+    devices, halving one axis (``axis``, default the *leading* axis — the
+    data axis by convention) until the total fits.
+
+    Pure string->string: this is the canonical scale-down rule shared by
+    elastic re-meshing after node loss (``ft.resilience.elastic_remesh``)
+    and the serving failure-domain layer (``repro.serve.domains``), so a
+    shrunk mesh always round-trips through :func:`parse_descriptor` and
+    lands on a shape the cache keys can name.  Raises ``ValueError`` when
+    even the fully-shrunk shape needs more devices than available."""
+    if n_devices < 1:
+        raise ValueError(f"n_devices must be >= 1, got {n_devices}")
+    axes = parse_descriptor(descriptor(desc))
+    if not axes:
+        return SINGLE
+    ax = axis if axis is not None else next(iter(axes))
+    if ax not in axes:
+        raise ValueError(f"shrink axis {ax!r} not in descriptor {desc!r}")
+
+    def total() -> int:
+        t = 1
+        for s in axes.values():
+            t *= s
+        return t
+
+    while total() > n_devices and axes[ax] > 1:
+        axes[ax] //= 2
+    if total() > n_devices:
+        raise ValueError(
+            f"not enough devices for {desc!r}: the fully shrunk shape "
+            f"still needs {total()}, have {n_devices}")
+    return ",".join(f"{a}={s}" for a, s in axes.items())
 
 
 def resolve_mesh(mesh=None):

@@ -19,8 +19,10 @@ any run:
               measured time, cache origin — ``print(obs.explain())``
   recorder    always-on flight recorder: a bounded ring of recent
               boundary events/spans/counter deltas, dumped as one JSON
-              black box when a request fails, a degradation fires, or an
-              artefact is quarantined — ``obs.flight_dump/flight_dumps``
+              black box when a request fails, a degradation fires, a
+              failure domain dies (reason ``host_lost`` — exactly one
+              dump per host-loss event), or an artefact is quarantined —
+              ``obs.flight_dump/flight_dumps``
   audit       roofline drift audit: baseline-relative per-key cost
               statistics plus cached-ranking re-checks that fire
               ``tune.drift`` and mark provenance ``[stale]`` —

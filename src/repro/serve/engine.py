@@ -24,7 +24,18 @@ Two engines share that core:
   * :class:`ShardedEngine` — the same continuous engine with the slot axis
     sharded over a named mesh axis (``data``): device state carries
     ``NamedSharding`` placements and GSPMD partitions the identical jitted
-    chunk, so decode runs data-parallel and stays token-identical.
+    chunk, so decode runs data-parallel and stays token-identical.  With
+    ``hosts=`` the mesh's devices partition into failure domains
+    (:mod:`repro.serve.domains`): a host lost or straggling at a chunk
+    boundary evacuates its slots back to the queue, shrinks the mesh onto
+    the survivors, and records the shrink as a ``degraded(mesh(a)->mesh(b))``
+    provenance origin — survivors and evacuees alike stay token-identical.
+
+Every engine can keep a scheduler-state **journal** (``journal=`` path,
+:class:`repro.serve.domains.SchedulerJournal`): submissions, per-boundary
+emitted-token snapshots, and terminal states, append-only and per-record
+checksummed, so a crashed/killed engine's surviving requests
+``domains.replay`` to token identity in a fresh process.
 
 Sampling determinism: each request's PRNG stream is
 ``fold_in(run_key, request_index)`` advanced once per sampled token, so the
@@ -671,7 +682,8 @@ class ContinuousEngine(_EngineBase):
                  kv_layout: str = "dense", block_size: int = 16,
                  kv_blocks: Optional[int] = None,
                  prefill_chunk: Optional[int] = None,
-                 resilience: Optional[ResilienceConfig] = None):
+                 resilience: Optional[ResilienceConfig] = None,
+                 journal=None):
         if kv_layout == "auto":
             from repro import autotune
             kv_layout = autotune.pick_kv_layout(
@@ -712,6 +724,17 @@ class ContinuousEngine(_EngineBase):
                 model_.prefill(params, tokens, cache, start=start,
                                lengths=lengths, attend_cache=True),
                 donate_argnums=(2,))
+        # scheduler-state journal (a path, or a SchedulerJournal): every
+        # submit/boundary-snapshot/terminal is appended checksummed, so a
+        # killed engine's surviving requests replay to token identity
+        # (repro.serve.domains.replay)
+        if journal is None:
+            self.journal = None
+        elif isinstance(journal, str):
+            from repro.serve.domains import SchedulerJournal
+            self.journal = SchedulerJournal(journal)
+        else:
+            self.journal = journal
         self._reset_state()
 
     # -- device state --------------------------------------------------------
@@ -799,6 +822,15 @@ class ContinuousEngine(_EngineBase):
                           max(int(request.max_new_tokens), 0),
                           deadline_s=request.deadline_s,
                           ttft_deadline_s=request.ttft_deadline_s)
+        if self.journal is not None:
+            self.journal.record_submit(
+                rid, request.prompt,
+                max_new=max(int(request.max_new_tokens), 0),
+                temperature=request.temperature,
+                top_k=getattr(request, "top_k", 0) or 0,
+                stream=rid if stream is None else stream,
+                deadline_s=request.deadline_s,
+                ttft_deadline_s=request.ttft_deadline_s)
         return rid
 
     def take_output(self, rid: int) -> List[int]:
@@ -825,6 +857,15 @@ class ContinuousEngine(_EngineBase):
         slot = self.sched.cancel(rid, reason)
         if slot is not None:
             self._evict_slot(slot)
+        if self.journal is not None and rid in self.sched.done:
+            # cancellation happens between boundaries: journal the final
+            # snapshot + terminal now, not at the next step_chunk (there
+            # may never be one)
+            toks = self.sched.outputs.get(rid)
+            if toks:
+                self.journal.record_progress(rid, toks)
+            state, why = self.sched.done[rid]
+            self.journal.record_terminal(rid, state, why)
         self._requests.pop(rid, None)
         self._stream_keys.pop(rid, None)
 
@@ -871,12 +912,34 @@ class ContinuousEngine(_EngineBase):
             obs.flight_dump("unhandled_exception",
                             error=f"{type(e).__name__}: {e}")
             raise
+        if self.journal is not None:
+            self._journal_sync(finished)
         self._check_recompiles()
         return finished
 
+    def _journal_sync(self, finished: List[int]) -> None:
+        """Journal this boundary: an emitted-token snapshot per request
+        with new tokens, then a terminal record per retirement.  Chunk
+        boundaries are the journal's granularity — inside a chunk the host
+        observes nothing, so there is nothing finer to record."""
+        for rid, toks in self.sched.outputs.items():
+            self.journal.record_progress(rid, toks)
+        for rid in finished:
+            state_reason = self.sched.done.get(rid)
+            if state_reason is not None:
+                self.journal.record_terminal(rid, *state_reason)
+
+    def _domain_sweep(self) -> None:
+        """Failure-domain hook, run first at every chunk boundary —
+        :class:`ShardedEngine` polls its host groups here; the unsharded
+        engines have no domains to lose."""
+
     def _step_chunk_inner(self) -> List[int]:
         finished: List[int] = []
-        # deadline sweep first: an expired request must not consume the
+        # failure domains first: a lost host must be evacuated + the mesh
+        # shrunk before this boundary admits into (or decodes on) it
+        self._domain_sweep()
+        # deadline sweep next: an expired request must not consume the
         # boundary's admission/prefill/decode work
         for slot, rid in self.sched.check_deadlines():
             if slot is not None:
@@ -1261,6 +1324,23 @@ class ShardedEngine(ContinuousEngine):
     cache into the sharded engine cache; shapes and shardings are closed
     after one pass over the prompt buckets, so warm traffic never
     recompiles (``decode_cache_misses()`` stays at 1).
+
+    ``hosts`` turns on the failure-domain layer
+    (:class:`repro.serve.domains.FailureDomains`): the mesh's devices
+    partition into that many contiguous host groups (``hosts="auto"``
+    groups by ``device.process_index`` on a real multi-host mesh), and at
+    every chunk boundary the engine polls for a lost or straggling host
+    (the ``mesh.host_lost`` / ``mesh.host_slow`` / ``collective.timeout``
+    fault sites stand in for heartbeats in drills).  On a loss the dead
+    host's slots are **evacuated** back to the queue front, the engine
+    re-places its state on the shrunk mesh (lost rows zeroed — their HBM
+    is gone), the autotuner re-ranks mesh candidates for the new
+    descriptor, and the shrink is recorded as provenance origin
+    ``degraded(mesh(data=8)->mesh(data=4))`` plus one flight dump with
+    reason ``host_lost``.  Survivors keep their tokens; evacuees re-decode
+    from their prompts bit-identically.  The shrink recompiles the chunk
+    once (new shardings) — the warm baseline resets, so the recompile
+    detector stays meaningful afterwards.
     """
 
     def __init__(self, model: Model, params, max_seq: int = 512,
@@ -1270,7 +1350,8 @@ class ShardedEngine(ContinuousEngine):
                  kv_layout: str = "dense", block_size: int = 16,
                  kv_blocks: Optional[int] = None,
                  prefill_chunk: Optional[int] = None,
-                 resilience: Optional[ResilienceConfig] = None):
+                 resilience: Optional[ResilienceConfig] = None,
+                 journal=None, hosts=None, host_slow_threshold: int = 3):
         from repro.sharding import ctx
         mesh = mesh if mesh is not None else ctx.get_mesh()
         if mesh is None:
@@ -1286,12 +1367,20 @@ class ShardedEngine(ContinuousEngine):
                              f"axis {mesh_axis!r} of size {n_shards}")
         self.mesh = mesh
         self.mesh_axis = mesh_axis
+        self.domains = None
+        if hosts is not None:
+            from repro.serve.domains import FailureDomains
+            self.domains = FailureDomains(
+                mesh, axis=mesh_axis,
+                hosts=None if hosts == "auto" else int(hosts),
+                slow_threshold=host_slow_threshold)
+        self._n_host_losses = 0
         super().__init__(model, params, max_seq=max_seq, slots=slots,
                          chunk=chunk, min_bucket=min_bucket,
                          tuning_cache=tuning_cache, batch_sizes=batch_sizes,
                          aot=aot, kv_layout=kv_layout, block_size=block_size,
                          kv_blocks=kv_blocks, prefill_chunk=prefill_chunk,
-                         resilience=resilience)
+                         resilience=resilience, journal=journal)
 
     # -- sharded device state ------------------------------------------------
 
@@ -1312,11 +1401,10 @@ class ShardedEngine(ContinuousEngine):
         return NamedSharding(
             self.mesh, PS(*([None] * axis + [self.mesh_axis])))
 
-    def _init_device_state(self, park: bool = False) -> None:
-        # the resilience rebuild paths call this too (chunk-failure
-        # quarantine, paged->dense degradation): the rebuilt state must
-        # come back SHARDED, or the next chunk would recompile unsharded
-        super()._init_device_state(park)
+    def _install_shardings(self) -> None:
+        """(Re)compute ``_cache_shardings`` against the CURRENT mesh and
+        replicate the params onto it — shared by the initial build and by
+        the failure-domain re-placement after a mesh shrink."""
         rep, row = self._shardings()
         self.params = jax.device_put(self.params, rep)   # replicate weights
         if self.kv_layout == "paged":
@@ -1338,6 +1426,13 @@ class ShardedEngine(ContinuousEngine):
             self._cache_shardings = jax.tree_util.tree_map(
                 lambda bl, sl: self._cache_sharding(bl, sl),
                 self.cache, small)
+
+    def _init_device_state(self, park: bool = False) -> None:
+        # the resilience rebuild paths call this too (chunk-failure
+        # quarantine, paged->dense degradation): the rebuilt state must
+        # come back SHARDED, or the next chunk would recompile unsharded
+        super()._init_device_state(park)
+        self._install_shardings()
         self.cache = jax.tree_util.tree_map(
             jax.device_put, self.cache, self._cache_shardings)
         self._pin_slot_state()
@@ -1370,9 +1465,162 @@ class ShardedEngine(ContinuousEngine):
         self._pin_slot_state()
         return out
 
+    # -- failure domains: detection -> evacuation -> shrink ------------------
+
+    def _domain_sweep(self) -> None:
+        if self.domains is None:
+            return
+        ev = self.domains.poll()
+        if ev is None:
+            return
+        if ev.kind == "slow":
+            obs.counter("serve.host_slow").inc()
+            obs.event("serve.host_slow", host=ev.host,
+                      strikes=self.domains.slow_count(ev.host),
+                      cause=ev.cause)
+            log.warning("%s", ev.cause)
+            if ev.delay_s:
+                time.sleep(ev.delay_s)   # the drill's injected stall
+            return
+        self._handle_host_loss(ev.host, ev.cause)
+
+    def _handle_host_loss(self, host: int, cause: str) -> None:
+        """Survive the loss of ``host``: evacuate its slots back to the
+        queue front, shrink the mesh onto the survivors, re-place device
+        state, re-tune for the new descriptor, and record the shrink as a
+        degradation (one provenance origin + one ``host_lost`` flight
+        dump per event)."""
+        from repro.mesh.strategy import descriptor
+        dom = self.domains
+        frm = descriptor(self.mesh)
+        lost_slots = set(dom.slots_of_host(host, self.slots))
+        # the slot axis must divide the surviving positions; when it would
+        # not (uneven host sizes), drop further hosts from the tail until
+        # it does — a smaller servable mesh beats an unshardable one.
+        # With the usual hosts-divides-slots layouts this never iterates.
+        drop = [host]
+
+        def _size_after() -> int:
+            return sum(len(g) for h, g in enumerate(dom.groups)
+                       if dom.alive[h] and h not in drop)
+
+        while _size_after() and self.slots % _size_after() != 0:
+            extra = max(h for h in dom.alive_hosts() if h not in drop)
+            drop.append(extra)
+            lost_slots |= set(dom.slots_of_host(extra, self.slots))
+        self._n_host_losses += 1
+        obs.counter("serve.host_losses").inc()
+        log.warning("host %d lost (%s): evacuating slots %s and shrinking "
+                    "the mesh", host, cause, sorted(lost_slots))
+        evacuated: List[int] = []
+        # descending slot order + appendleft => evacuees rejoin the queue
+        # front in ascending slot order (FIFO among themselves, ahead of
+        # never-admitted requests)
+        for slot in sorted(lost_slots, reverse=True):
+            rid = self.sched.evacuate(slot, reason=cause)
+            if rid is None:
+                continue
+            self._evict_slot(slot)
+            evacuated.append(rid)
+            if self.journal is not None:
+                self.journal.record_evacuate(rid, host)
+        for h in drop:
+            dom.mark_lost(h)    # raises when no host survives: unservable
+        new_mesh = dom.shrunk_mesh()
+        to = descriptor(new_mesh)
+        obs.event("serve.host_lost", host=host, cause=cause, frm=frm,
+                  to=to, evacuated=",".join(str(r) for r in evacuated),
+                  dropped_hosts=",".join(str(h) for h in drop))
+        self._remesh(new_mesh, sorted(lost_slots))
+        record_degradation(
+            "mesh", "serve.engine",
+            key=f"serve|mesh|slots={self.slots}|axis={self.mesh_axis}",
+            frm=f"mesh({frm})", to=f"mesh({to})", note=cause,
+            params={"mesh_axis": self.mesh_axis, "hosts": dom.n_hosts,
+                    "alive": len(dom.alive_hosts())},
+            dump=False)
+        # exactly ONE flight dump per host-loss event, reason host_lost
+        # (record_degradation's generic dump is suppressed above)
+        obs.flight_dump("host_lost", host=host, cause=cause, frm=frm,
+                        to=to, evacuated=",".join(str(r) for r in evacuated))
+        if self.journal is not None:
+            self.journal.record_shrink(frm, to, host, cause)
+        self._retune_mesh(to)
+
+    def _remesh(self, new_mesh, lost_slots: List[int]) -> None:
+        """Re-place every device buffer onto ``new_mesh``, preserving the
+        surviving slots' rows and zeroing the lost ones (the dead host's
+        HBM is gone — nothing may depend on it, and survivors provably do
+        not: their rows round-trip through the host copy bit-identical)."""
+        with obs.span("serve.remesh", frm=str(self.mesh.shape),
+                      to=str(new_mesh.shape)):
+            cache_host = jax.device_get(self.cache)
+            cache_host = self._zero_slot_rows(cache_host, lost_slots)
+            (self.tokens, self.pos, self.keys, self.temps,
+             self.top_ks) = jax.device_get(
+                (self.tokens, self.pos, self.keys, self.temps, self.top_ks))
+            if self.block_tables is not None:
+                self.block_tables = jax.device_get(self.block_tables)
+            self.mesh = new_mesh
+            self._install_shardings()
+            self.cache = jax.tree_util.tree_map(
+                jax.device_put, cache_host, self._cache_shardings)
+            self._pin_slot_state()
+        # stale strategy artefacts: the old-mesh AOT prefill executables
+        # would reject the re-placed params (jit re-lowers once, fine);
+        # the chunk recompiles once for the new shardings — reset the warm
+        # baseline so that expected compile is not flagged as drift
+        self._prefill_exes.clear()
+        self._jit_baseline = None
+
+    def _zero_slot_rows(self, cache_host, lost_slots: List[int]):
+        """Zero the lost slots' rows of a HOST-side cache pytree (numpy):
+        the simulation of their HBM dying with the host."""
+        if not lost_slots:
+            return cache_host
+        idx = np.asarray(sorted(lost_slots), dtype=np.int64)
+
+        def zero(tree, small):
+            def z(bl, sl):
+                axis = _slot_axis(bl, sl)
+                if axis is None:
+                    return bl
+                bl = np.array(bl)
+                sli = [slice(None)] * bl.ndim
+                sli[axis] = idx
+                bl[tuple(sli)] = 0
+                return bl
+            return jax.tree_util.tree_map(z, tree, small)
+
+        if self.kv_layout == "paged":
+            kv, st = self.model.split_paged_cache(cache_host)
+            if st is not None:
+                st = zero(st, self.model.init_prefill_state(1))
+            return self.model.merge_paged_cache(kv, st)
+        return zero(cache_host, self.model.init_cache(1, self.max_seq))
+
+    def _retune_mesh(self, desc: str) -> None:
+        """Re-rank mesh-axis candidates for the shrunk descriptor (cache
+        keys carry it, so this fills the cold rows the new mesh would
+        otherwise tune one by one at dispatch)."""
+        if self.tuning_cache is None:
+            return
+        from repro.serve.domains import retune_for_mesh
+        try:
+            retune_for_mesh(self.model.cfg, desc, max_seq=self.max_seq,
+                            batch_sizes=(1, self.slots),
+                            cache=self.tuning_cache)
+        except Exception:
+            log.debug("mesh retune for %s skipped", desc, exc_info=True)
+
     def stats(self) -> dict:
         out = super().stats()
+        from repro.mesh.strategy import descriptor
         out["mesh"] = {"axis": self.mesh_axis,
                        "shards": int(self.mesh.shape[self.mesh_axis]),
-                       "devices": int(self.mesh.devices.size)}
+                       "devices": int(self.mesh.devices.size),
+                       "descriptor": descriptor(self.mesh)}
+        if self.domains is not None:
+            out["mesh"]["hosts"] = self.domains.describe()
+        out["resilience"]["host_losses"] = self._n_host_losses
         return out

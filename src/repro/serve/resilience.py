@@ -82,7 +82,7 @@ class ResilienceConfig:
 
 def record_degradation(kind: str, kernel: str, key: str, frm: str, to: str,
                        params: Optional[Dict[str, object]] = None,
-                       **kw) -> str:
+                       dump: bool = True, **kw) -> str:
     """Record one rung of the degradation ladder; returns the origin string.
 
     Every fallback in the tree funnels through here (or through
@@ -91,14 +91,20 @@ def record_degradation(kind: str, kernel: str, key: str, frm: str, to: str,
     ``degraded(frm->to)``, the ``serve.degradations`` counter, and an
     event carrying the cause.  ``kw`` passes through to ``obs.record``
     (shape/dtype/backend/layout/note/...).
+
+    ``dump=False`` suppresses the flight-recorder snapshot for callers
+    that emit their own, richer dump for the same incident (the host-loss
+    path dumps once with reason ``host_lost``; two black boxes for one
+    event would break the bench's one-dump-per-event accounting).
     """
     origin = f"degraded({frm}->{to})"
     obs.record(kind, kernel, key, params or {}, origin, **kw)
     obs.counter("serve.degradations").inc()
     obs.event("serve.degraded", kind=kind, kernel=kernel, key=key,
               origin=origin, note=str(kw.get("note", "")))
-    # a degradation is a strategy change under duress: snapshot the black
-    # box so the dump shows what led up to it
-    obs.flight_dump("degradation", kind=kind, kernel=kernel, key=key,
-                    frm=frm, to=to)
+    if dump:
+        # a degradation is a strategy change under duress: snapshot the
+        # black box so the dump shows what led up to it
+        obs.flight_dump("degradation", kind=kind, kernel=kernel, key=key,
+                        frm=frm, to=to)
     return origin

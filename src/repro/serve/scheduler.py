@@ -134,6 +134,7 @@ class Scheduler:
         self.n_timeouts = 0
         self.n_cancelled = 0
         self.n_failed = 0
+        self.n_evacuations = 0
 
     # -- intake --------------------------------------------------------------
 
@@ -335,6 +336,41 @@ class Scheduler:
         """Quarantine a request as ``failed`` (same mechanics as cancel)."""
         return self._terminate(rid, "failed", reason)
 
+    def evacuate(self, slot_idx: int,
+                 reason: str = "host lost") -> Optional[int]:
+        """Return an in-flight request to the FRONT of the pending queue —
+        the failure-domain path (``repro.serve.domains``): its slot lived
+        on a host that died, so the slot frees without the request ending.
+
+        The request restarts from its prompt on re-admission: emitted
+        tokens are discarded (they regenerate bit-identically — sampling
+        is a pure function of the request's PRNG stream, independent of
+        slot/batch/placement), timing metadata resets so TTFT is measured
+        against the *new* admission, and — paged — the slot's pages return
+        to the pool.  Returns the evacuated req_id, or None for a free
+        slot.  Callers evacuating several slots appendleft in *descending*
+        slot order to preserve FIFO among the evacuees."""
+        slot = self.slots[slot_idx]
+        rid = slot.req_id
+        if rid < 0:
+            return None
+        meta = self.meta.get(rid)
+        if meta is not None:
+            meta.pop("t_first", None)
+            meta.pop("t_admit", None)
+        self.outputs[rid] = []
+        slot.req_id = -1
+        slot.remaining = 0
+        slot.prefill_pos = slot.prefill_len = 0
+        if self.pool is not None:
+            self.pool.free(slot_idx)
+        self.pending.appendleft(rid)
+        self.n_evacuations += 1
+        obs.counter("serve.evacuations").inc()
+        obs.event("serve.evacuate", req_id=rid, slot=slot_idx,
+                  reason=reason)
+        return rid
+
     def check_deadlines(self, now: Optional[float] = None
                         ) -> List[Tuple[Optional[int], int]]:
         """Expire requests past their deadlines; returns
@@ -399,6 +435,7 @@ class Scheduler:
             "timeouts": self.n_timeouts,
             "cancelled": self.n_cancelled,
             "failed": self.n_failed,
+            "evacuations": self.n_evacuations,
             "pending": len(self.pending),
             "busy": sum(1 for s in self.slots if not s.free),
             "prefilling": sum(1 for s in self.slots if s.prefilling),

@@ -43,6 +43,13 @@ Sites wired into the tree (see docs/resilience.md for the fault model):
     serve.pool_corrupt  damage the KV block pool (validate() then catches)
     executor.build      ctx key — raise InjectedFault in executor staging
     artefact.corrupt    ctx what, path — a JSON artefact reads as corrupt
+    mesh.host_lost      ctx host, axis — a failure domain's devices vanish
+                        at the chunk boundary (ShardedEngine hosts=)
+    mesh.host_slow      ctx host — a straggling host; ``value`` is the
+                        simulated delay in seconds; escalates to lost
+                        after ``slow_threshold`` consecutive firings
+    collective.timeout  ctx axis — a cross-host collective hangs; ``value``
+                        (int) names the presumed-dead host, default last
 
 When no plan is active (no ``inject`` scope, no ``REPRO_FAULTS``),
 ``should_fire`` is two dict lookups — the sites cost nothing in
